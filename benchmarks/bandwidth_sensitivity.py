@@ -1,0 +1,51 @@
+"""Bandwidth-variation robustness (motivated by paper Fig. 9).
+
+The paper measures real link bandwidth fluctuating over 100 s and plans with
+the average.  This study quantifies what that costs: perturb every link
+±σ%, evaluate (a) the placement planned at NOMINAL bandwidth vs (b) an
+oracle re-plan at the perturbed bandwidth.  The gap is the value of online
+re-planning (which `core.placement.replan` provides for device loss, and
+would provide here by re-solving with refreshed profiles).
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core.costmodel import CostModel
+from repro.core.devices import ClusterSpec, inter_server_cluster
+from repro.core.modelgraph import paper_graph
+from repro.core.placement import plan
+from repro.core.simulate import evaluate
+
+
+def _perturb(cluster: ClusterSpec, sigma: float, rng) -> ClusterSpec:
+    noise = 1.0 + rng.uniform(-sigma, sigma, size=cluster.link_bw.shape)
+    return ClusterSpec(
+        devices=cluster.devices,
+        link_bw=cluster.link_bw * noise,
+        link_latency=cluster.link_latency.copy(),
+        name=f"{cluster.name}~{sigma:.0%}",
+    )
+
+
+def run(csv: List[str], model: str = "gpt3-330m", trials: int = 5):
+    nominal = inter_server_cluster()
+    g = paper_graph(model)
+    planned = plan(g, nominal, method="moirai", time_limit=20, mip_rel_gap=0.05)
+    rng = np.random.default_rng(0)
+    print("\n# Bandwidth sensitivity (Fig. 9 regime): fixed plan vs re-plan")
+    print(f"{'sigma':>6s} {'fixed(ms)':>10s} {'replan(ms)':>11s} {'regret':>7s}")
+    for sigma in (0.1, 0.2, 0.4):
+        fixed, replanned = [], []
+        for t in range(trials):
+            pert = _perturb(nominal, sigma, rng)
+            cm = CostModel(pert)
+            fixed.append(evaluate(g, planned.placement, cm))
+            r2 = plan(g, pert, method="moirai", time_limit=10, mip_rel_gap=0.1)
+            replanned.append(evaluate(g, r2.placement, cm))
+        f, r = float(np.mean(fixed)), float(np.mean(replanned))
+        print(f"{sigma:6.0%} {f*1e3:10.3f} {r*1e3:11.3f} {f/r:7.3f}x")
+        csv.append(f"bw_sens/{model}/{sigma:.0%},{f*1e6:.0f},replan_us={r*1e6:.0f}")

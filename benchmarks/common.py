@@ -1,0 +1,69 @@
+"""Shared benchmark plumbing: instances, planners, simulator evaluation."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+from repro.core.costmodel import CostModel
+from repro.core.devices import ClusterSpec, inter_server_cluster, intra_server_cluster
+from repro.core.fusion import DEFAULT_RULES
+from repro.core.placement import PlanConfig, plan
+from repro.core.simulate import evaluate
+
+# paper model grid (kept small enough for the 1-core container; the full
+# Table IV sizes are exercised through the generators' `layers` parameter)
+PAPER_GRID = [
+    "gpt3-330m", "gpt3-1.3b",
+    "swin-1.8b", "swin-6.6b",
+    "af2-87m", "af2-930m",
+]
+
+METHODS = ["placeto", "msct", "getf", "moirai"]  # paper Fig. 10 order
+
+SCENARIOS: Dict[str, Callable[[], ClusterSpec]] = {
+    "inter-server": inter_server_cluster,
+    "intra-server": intra_server_cluster,
+}
+
+
+@dataclass
+class BenchResult:
+    model: str
+    scenario: str
+    method: str
+    coarsened: bool
+    makespan_s: float
+    gen_time_s: float
+    status: str
+
+
+def run_one(
+    graph, cluster, method: str, coarsen: bool, *, time_limit=45.0, seed=0,
+    placeto_iters=60,
+) -> BenchResult:
+    cm = CostModel(cluster)
+    cfg = PlanConfig(
+        method=method,
+        coarsen=coarsen,
+        time_limit=time_limit,
+        mip_rel_gap=0.05,
+        placeto_iters=placeto_iters,
+        seed=seed,
+    )
+    t0 = time.perf_counter()
+    res = plan(graph, cluster, cfg)
+    gen = time.perf_counter() - t0
+    # evaluate through the SAME simulator with runtime backend fusion applied
+    # (placements from the original graph still get co-located chains fused)
+    mk = evaluate(graph, res.placement, cm, runtime_fusion_rules=DEFAULT_RULES)
+    return BenchResult(
+        model=graph.name,
+        scenario=cluster.name,
+        method=method,
+        coarsened=coarsen,
+        makespan_s=mk,
+        gen_time_s=gen,
+        status=res.status,
+    )

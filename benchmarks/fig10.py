@@ -1,0 +1,45 @@
+"""Paper Fig. 10: end-to-end latency speedup of Moirai vs Placeto / m-SCT /
+GETF, on inter-server and intra-server clusters, original vs coarsened
+graphs.  Latency = event-simulated makespan under the calibrated cost model
+with runtime backend fusion applied (DESIGN.md §7: simulator replaces the
+4-GPU testbeds)."""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.core.modelgraph import paper_graph
+
+from .common import METHODS, PAPER_GRID, SCENARIOS, run_one
+
+# keep the 1-core budget sane: subset of models per full run; the grid is a
+# CLI knob in benchmarks.run
+DEFAULT_MODELS = ["gpt3-330m", "swin-1.8b", "af2-87m"]
+
+
+def run(csv: List[str], models=None, time_limit=45.0):
+    models = models or DEFAULT_MODELS
+    print("\n# Fig. 10 — makespan (ms) and speedup of Moirai vs baselines")
+    for scen_name, scen_fn in SCENARIOS.items():
+        cluster = scen_fn()
+        for coarsen in (False, True):
+            tag = "coarsened" if coarsen else "original"
+            print(f"\n## {scen_name} / {tag} graphs")
+            header = f"{'model':12s}" + "".join(f"{m:>12s}" for m in METHODS) + "   speedup(vs best baseline)"
+            print(header)
+            for model in models:
+                g = paper_graph(model)
+                mks = {}
+                for method in METHODS:
+                    r = run_one(g, cluster, method, coarsen, time_limit=time_limit)
+                    mks[method] = r.makespan_s
+                    csv.append(
+                        f"fig10/{scen_name}/{tag}/{model}/{method},"
+                        f"{r.makespan_s*1e6:.1f},gen_s={r.gen_time_s:.2f}"
+                    )
+                best_base = min(v for k, v in mks.items() if k != "moirai")
+                speedup = best_base / mks["moirai"] if mks["moirai"] else float("nan")
+                row = f"{model:12s}" + "".join(
+                    f"{mks[m]*1e3:12.3f}" for m in METHODS
+                ) + f"   {speedup:5.2f}x"
+                print(row)

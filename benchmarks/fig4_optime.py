@@ -1,0 +1,28 @@
+"""Paper Fig. 4: distribution of per-operator times across devices — the
+observation (most ops are microseconds) that motivates coarsening."""
+
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core.costmodel import CostModel
+from repro.core.devices import inter_server_cluster
+from repro.core.modelgraph import paper_graph
+
+
+def run(csv: List[str]):
+    cluster = inter_server_cluster()
+    cm = CostModel(cluster)
+    print("\n# Fig. 4 — operator time distribution (µs) per device")
+    print(f"{'model':12s} {'device':12s} {'p50':>8s} {'mean':>8s} {'p95':>8s} {'max':>9s}")
+    for model in ["gpt3-330m", "swin-1.8b", "af2-87m"]:
+        g = paper_graph(model)
+        for k, dev in enumerate(cluster.devices):
+            ts = np.array([cm.compute_time(n, k) for n in g.nodes.values()]) * 1e6
+            print(
+                f"{model:12s} {dev.name:12s} {np.median(ts):8.1f} {ts.mean():8.1f} "
+                f"{np.percentile(ts, 95):8.1f} {ts.max():9.1f}"
+            )
+            csv.append(f"fig4/{model}/{dev.name},{ts.mean():.2f},p50={np.median(ts):.2f}")

@@ -1,0 +1,50 @@
+"""§Roofline: render the dry-run roofline artifacts as the EXPERIMENTS table
+(beyond-paper deliverable; reads benchmarks/artifacts/roofline/*.json)."""
+
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+from typing import List
+
+ART = Path(__file__).resolve().parent / "artifacts" / "roofline"
+ART_DRY = Path(__file__).resolve().parent / "artifacts" / "dryrun"
+
+
+def rows():
+    out = []
+    for f in sorted(glob.glob(str(ART / "*.json"))):
+        out.append(json.load(open(f)))
+    return out
+
+
+def run(csv: List[str]):
+    print("\n# Roofline — per (arch × shape), single-pod 16×16 mesh, TPU v5e terms")
+    print(
+        f"{'arch':24s} {'shape':12s} {'dominant':10s} {'t_comp(s)':>10s} "
+        f"{'t_mem(s)':>10s} {'t_coll(s)':>10s} {'useful':>7s}"
+    )
+    for d in rows():
+        if d["status"] != "ok":
+            print(f"{d['arch']:24s} {d['shape']:12s} skipped: {d.get('reason', d.get('error',''))[:50]}")
+            continue
+        print(
+            f"{d['arch']:24s} {d['shape']:12s} {d['dominant']:10s} "
+            f"{d['t_compute_s']:10.4f} {d['t_memory_s']:10.4f} "
+            f"{d['t_collective_s']:10.4f} {d['useful_flops_ratio']:7.2f}"
+        )
+        csv.append(
+            f"roofline/{d['arch']}/{d['shape']},{d['step_time_lb_s']*1e6:.0f},"
+            f"dominant={d['dominant']};useful={d['useful_flops_ratio']:.3f}"
+        )
+
+    # dry-run fit summary
+    n_ok = n_fit = 0
+    for f in sorted(glob.glob(str(ART_DRY / "*.json"))):
+        d = json.load(open(f))
+        if d["status"] == "ok":
+            n_ok += 1
+            n_fit += bool(d.get("fits_16gb", False))
+    if n_ok:
+        print(f"\n# Dry-run: {n_ok} compiled cells; {n_fit} within the 16GB/chip TPU-fit estimate")

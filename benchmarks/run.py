@@ -1,0 +1,56 @@
+"""Benchmark harness entrypoint: one section per paper table/figure plus the
+roofline table.  Prints human tables AND ``name,us_per_call,derived`` CSV.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="small model grid")
+    ap.add_argument("--sections", default="table_iv,fig4,fig10,table_v,roofline,bw_sens")
+    args = ap.parse_args()
+
+    csv: List[str] = []
+    sections = args.sections.split(",")
+    time_limit = 15.0 if args.fast else 45.0
+    models = ["gpt3-330m", "af2-87m"] if args.fast else None
+
+    if "table_iv" in sections:
+        from . import table_iv
+
+        table_iv.run(csv)
+    if "fig4" in sections:
+        from . import fig4_optime
+
+        fig4_optime.run(csv)
+    if "fig10" in sections:
+        from . import fig10
+
+        fig10.run(csv, models=models, time_limit=time_limit)
+    if "table_v" in sections:
+        from . import table_v
+
+        table_v.run(csv, models=models, time_limit=time_limit)
+    if "roofline" in sections:
+        from . import roofline_table
+
+        roofline_table.run(csv)
+    if "bw_sens" in sections:
+        from . import bandwidth_sensitivity
+
+        bandwidth_sensitivity.run(csv, trials=2 if args.fast else 5)
+
+    print("\n# CSV (name,us_per_call,derived)")
+    for line in csv:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Paper Table V: placement generation time per method, original vs
+coarsened (HiGHS stands in for Gurobi — absolute times differ; the claims
+validated are the ORDERING m-SCT < GETF ≈ Moirai ≪ RL and the coarsening
+time reduction)."""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.core.modelgraph import paper_graph
+
+from .common import METHODS, run_one, SCENARIOS
+
+
+def run(csv: List[str], models=None, time_limit=45.0):
+    models = models or ["gpt3-330m", "swin-1.8b"]
+    cluster = SCENARIOS["inter-server"]()
+    print("\n# Table V — placement generation time (s)")
+    print(f"{'model':12s} {'graph':10s}" + "".join(f"{m:>10s}" for m in METHODS))
+    for model in models:
+        g = paper_graph(model)
+        for coarsen in (False, True):
+            times = {}
+            for method in METHODS:
+                r = run_one(g, cluster, method, coarsen, time_limit=time_limit)
+                times[method] = r.gen_time_s
+                csv.append(
+                    f"table_v/{model}/{'coarse' if coarsen else 'orig'}/{method},"
+                    f"{r.gen_time_s*1e6:.0f},"
+                )
+            tag = "coarsened" if coarsen else "original"
+            print(f"{model:12s} {tag:10s}" + "".join(f"{times[m]:10.2f}" for m in METHODS))

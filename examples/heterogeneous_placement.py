@@ -1,0 +1,37 @@
+"""The paper's headline scenario: place GPT-3 / Swin / AlphaFold2 across a
+heterogeneous 4-GPU cluster and compare all four algorithms, inter-server vs
+intra-server, original vs coarsened (Fig. 10 in miniature).
+
+    PYTHONPATH=src python examples/heterogeneous_placement.py
+"""
+
+from repro.core import CostModel, plan
+from repro.core.devices import inter_server_cluster, intra_server_cluster
+from repro.core.fusion import DEFAULT_RULES
+from repro.core.modelgraph import paper_graph
+from repro.core.simulate import evaluate
+
+
+def main():
+    for cluster in (inter_server_cluster(), intra_server_cluster()):
+        cm = CostModel(cluster)
+        print(f"\n=== {cluster.name} ===")
+        for model in ("gpt3-330m", "swin-1.8b", "af2-87m"):
+            g = paper_graph(model)
+            line = [f"{model:10s}"]
+            base = None
+            for method in ("placeto", "msct", "getf", "moirai"):
+                res = plan(
+                    g, cluster, method=method, coarsen=True,
+                    time_limit=20, mip_rel_gap=0.05, placeto_iters=40,
+                )
+                mk = evaluate(g, res.placement, cm, runtime_fusion_rules=DEFAULT_RULES)
+                if method == "placeto":
+                    base = mk
+                line.append(f"{method}={mk*1e3:8.2f}ms")
+            line.append(f"speedup_vs_placeto={base/mk:.2f}x")
+            print("  ".join(line))
+
+
+if __name__ == "__main__":
+    main()

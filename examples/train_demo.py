@@ -1,0 +1,60 @@
+"""End-to-end training driver: train a ~100M-param llama on the synthetic
+corpus for a few hundred steps with checkpoints; then kill/resume.
+
+    PYTHONPATH=src python examples/train_demo.py [--steps 300] [--d-model 512]
+
+With d_model=512/12 layers this is ≈100M params — a few hundred steps take a
+while on 1 CPU core; the default below is sized to finish in minutes and the
+loss curve is written to /tmp/repro_train_demo/metrics.jsonl.
+"""
+
+import argparse
+from dataclasses import replace
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig
+from repro.train.loop import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--vocab", type=int, default=2048)
+    args = ap.parse_args()
+
+    cfg = replace(
+        get_config("llama3.2-1b").smoke(),
+        n_layers=args.layers,
+        d_model=args.d_model,
+        n_heads=8,
+        n_kv_heads=4,
+        head_dim=args.d_model // 8,
+        d_ff=4 * args.d_model,
+        vocab_size=args.vocab,
+    )
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                          global_batch=args.batch)
+    train_cfg = TrainConfig(
+        steps=args.steps,
+        checkpoint_every=max(args.steps // 4, 10),
+        checkpoint_dir="/tmp/repro_train_demo/ckpt",
+        metrics_path="/tmp/repro_train_demo/metrics.jsonl",
+        log_every=10,
+    )
+    import os
+
+    os.makedirs("/tmp/repro_train_demo", exist_ok=True)
+    out = train(cfg, data_cfg, train_cfg)
+    print(
+        f"loss {out['first_loss']:.3f} -> {out['final_loss']:.3f} "
+        f"over {out['steps_run']} steps ({out['wall_s']:.0f}s)"
+    )
+    assert out["final_loss"] < out["first_loss"], "no learning happened?!"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""repro: Moirai device placement (CS.DC 2023) + multi-pod JAX framework.
+
+Subpackages:
+  core      — the paper: graph IR, GCOF fusion coarsening, heterogeneous
+              cluster model, MILP/heuristic/RL planners, event simulator
+  models    — 10-arch zoo (dense/MoE/enc-dec/VLM/SSM/hybrid), pure JAX
+  configs   — assigned architecture configs + input-shape grid
+  parallel  — DP/TP/EP/SP sharding rules, shard_map MoE, logical axes
+  kernels   — Pallas TPU kernels (flash-attention, rmsnorm, SSD, grouped GEMM)
+  data      — deterministic synthetic corpus, sharded prefetching pipeline
+  train     — AdamW(+8-bit), ZeRO-1, checkpointing, FT loop, compression
+  serving   — Moirai-driven stage executor, continuous batching engine
+  launch    — production mesh, multi-pod dry-run, roofline, train/serve CLIs
+"""
+
+__version__ = "0.1.0"

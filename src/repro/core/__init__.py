@@ -1,0 +1,33 @@
+# Moirai device placement: graph IR, GCOF fusion coarsening, heterogeneous
+# cluster model, MILP + heuristic + RL planners, event simulator.
+from .costmodel import CostModel
+from .devices import ClusterSpec, DeviceSpec, get_cluster
+from .fusion import DEFAULT_RULES, EIGEN_RULES, XLA_RULES, gcof, runtime_fuse
+from .graph import AugmentedDAG, OpGraph, OpNode, augment
+from .milp import PlacementResult, solve_placement
+from .placement import PlanConfig, plan, replan
+from .simulate import SimResult, evaluate, simulate, validate_schedule
+
+__all__ = [
+    "AugmentedDAG",
+    "ClusterSpec",
+    "CostModel",
+    "DEFAULT_RULES",
+    "DeviceSpec",
+    "EIGEN_RULES",
+    "OpGraph",
+    "OpNode",
+    "PlacementResult",
+    "PlanConfig",
+    "SimResult",
+    "XLA_RULES",
+    "augment",
+    "evaluate",
+    "gcof",
+    "get_cluster",
+    "plan",
+    "replan",
+    "simulate",
+    "solve_placement",
+    "validate_schedule",
+]

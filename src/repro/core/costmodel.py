@@ -1,0 +1,175 @@
+"""Cost model: per-(op, device) processing time and data-flow transfer time.
+
+Paper §III-C "Input profiling": Moirai needs p_ik (compute time of op i on
+device k) and p^comm_{q,k',k''} (transfer time of flow q over channel k'→k'').
+The paper estimates compute time with a learned predictor (Habitat [41]); in
+this container there is no GPU to profile, so we use a calibrated roofline
+estimator — time = max(flops / (peak·eff), bytes / hbm_bw) + fixed dispatch
+overhead — which is the same family of model Habitat interpolates, and the
+estimator can be *re-calibrated* from real ``compiled.cost_analysis()``
+numbers via :func:`calibrate_from_cost_analysis` (see launch/roofline.py).
+
+The dispatch overhead term matters: it is what makes operator fusion a win
+for short ops (paper Fig. 4: most ops are microseconds).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Mapping, Optional
+
+import numpy as np
+
+from .devices import ClusterSpec, DeviceSpec
+from .graph import AugmentedDAG, OpGraph, OpNode
+
+# MXU/TensorCore-utilization efficiency by op class: matmuls approach peak,
+# elementwise ops are bandwidth-bound (handled by the bytes term), irregular
+# ops (softmax/sort) fall in between.
+DEFAULT_EFFICIENCY: Dict[str, float] = {
+    "matmul": 0.70,
+    "conv": 0.55,
+    "einsum": 0.65,
+    "ssd": 0.45,
+    "scan": 0.30,
+    "softmax": 0.25,
+    "default": 0.30,
+}
+
+DEFAULT_DISPATCH_OVERHEAD_S = 3e-6  # per-kernel launch overhead
+
+
+@dataclass
+class CostModel:
+    cluster: ClusterSpec
+    efficiency: Mapping[str, float] = field(default_factory=lambda: dict(DEFAULT_EFFICIENCY))
+    dispatch_overhead_s: float = DEFAULT_DISPATCH_OVERHEAD_S
+    # multiplicative per-device calibration (from profiling real lowerings)
+    device_scale: Optional[np.ndarray] = None
+
+    def __post_init__(self):
+        if self.device_scale is None:
+            self.device_scale = np.ones(self.cluster.k)
+
+    # ------------------------------------------------------------- compute
+    def _eff(self, op_type: str) -> float:
+        # a fused op "a∘b∘c" uses the max-efficiency member as the anchor
+        # (the dominant-cost member is the matmul/conv when present)
+        parts = op_type.split("∘")
+        effs = [self.efficiency.get(p, self.efficiency["default"]) for p in parts]
+        return max(effs)
+
+    def compute_time(self, node: OpNode, device_idx: int) -> float:
+        """p_ik — processing time of ``node`` on device ``device_idx`` (s)."""
+        dev = self.cluster.devices[device_idx]
+        serial = node.meta.get("serial") if node.meta else None
+        if serial:
+            # hierarchy supernode: members execute sequentially (NOT fused) —
+            # the serial sum of per-member roofline maxima
+            t = 0.0
+            for flops, nbytes, op_type in serial:
+                eff = self._eff(op_type)
+                t_f = flops / (dev.peak_flops * eff) if flops else 0.0
+                t_b = nbytes / dev.hbm_bw if nbytes else 0.0
+                t += max(t_f, t_b) + self.dispatch_overhead_s
+            return t * float(self.device_scale[device_idx])
+        eff = self._eff(node.op_type)
+        t_flops = node.flops / (dev.peak_flops * eff) if node.flops else 0.0
+        t_bytes = node.bytes_accessed / dev.hbm_bw if node.bytes_accessed else 0.0
+        return (max(t_flops, t_bytes) + self.dispatch_overhead_s) * float(
+            self.device_scale[device_idx]
+        )
+
+    def compute_matrix(self, graph: OpGraph) -> Dict[int, np.ndarray]:
+        """p_ik for all ops: node id -> [K] array of seconds."""
+        return {
+            nid: np.array(
+                [self.compute_time(n, k) for k in range(self.cluster.k)]
+            )
+            for nid, n in graph.nodes.items()
+        }
+
+    # ---------------------------------------------------------------- comm
+    def comm_time(self, nbytes: float, src_dev: int, dst_dev: int) -> float:
+        """p^comm over the (src,dst) channel; 0 on the same device."""
+        return self.cluster.comm_time(nbytes, src_dev, dst_dev)
+
+    def comm_matrix(self, nbytes: float) -> np.ndarray:
+        """[K, K] transfer times of an ``nbytes`` flow for every channel."""
+        k = self.cluster.k
+        out = np.zeros((k, k))
+        for s in range(k):
+            for d in range(k):
+                if s != d:
+                    out[s, d] = self.comm_time(nbytes, s, d)
+        return out
+
+    # ---------------------------------------------------------- memory fit
+    def memory_ok(self, graph: OpGraph, placement: Mapping[int, int]) -> bool:
+        usage = np.zeros(self.cluster.k)
+        for nid, dev in placement.items():
+            usage[dev] += graph.nodes[nid].param_bytes
+        caps = np.array([d.mem_bytes for d in self.cluster.devices])
+        return bool(np.all(usage <= caps))
+
+    def memory_usage(self, graph: OpGraph, placement: Mapping[int, int]) -> np.ndarray:
+        usage = np.zeros(self.cluster.k)
+        for nid, dev in placement.items():
+            usage[dev] += graph.nodes[nid].param_bytes
+        return usage
+
+    # ------------------------------------------------------------ bounds
+    def critical_path_lower_bound(self, graph: OpGraph) -> float:
+        """Lower bound on makespan: longest path with best-device op times and
+        zero communication.  Any feasible schedule's makespan is ≥ this."""
+        best = {
+            nid: min(self.compute_time(n, k) for k in range(self.cluster.k))
+            for nid, n in graph.nodes.items()
+        }
+        dist: Dict[int, float] = {}
+        for nid in graph.topo_order():
+            node = graph.nodes[nid]
+            start = max((dist[p] for p in node.inputs), default=0.0)
+            dist[nid] = start + best[nid]
+        return max(dist.values()) if dist else 0.0
+
+    def total_work_lower_bound(self, graph: OpGraph) -> float:
+        """Lower bound: total work / aggregate throughput (perfect balance)."""
+        total = sum(
+            min(self.compute_time(n, k) for k in range(self.cluster.k)) *
+            self.cluster.devices[
+                int(np.argmin([self.compute_time(n, k) for k in range(self.cluster.k)]))
+            ].peak_flops
+            for n in graph.nodes.values()
+        )
+        agg = sum(d.peak_flops for d in self.cluster.devices)
+        return total / agg if agg else 0.0
+
+    def lower_bound(self, graph: OpGraph) -> float:
+        return max(
+            self.critical_path_lower_bound(graph), self.total_work_lower_bound(graph)
+        )
+
+
+def calibrate_from_cost_analysis(
+    cm: CostModel,
+    measured: Mapping[str, float],
+    estimated: Mapping[str, float],
+) -> CostModel:
+    """Scale the cost model so estimator output matches observed per-op costs.
+
+    ``measured``/``estimated``: op_type -> seconds.  Returns a new CostModel
+    with updated per-class efficiencies (clipped to (0, 1])."""
+    eff = dict(cm.efficiency)
+    for op, t_meas in measured.items():
+        t_est = estimated.get(op)
+        if not t_est or t_meas <= 0:
+            continue
+        base = eff.get(op, eff["default"])
+        eff[op] = float(np.clip(base * (t_est / t_meas), 1e-3, 1.0))
+    return CostModel(
+        cluster=cm.cluster,
+        efficiency=eff,
+        dispatch_overhead_s=cm.dispatch_overhead_s,
+        device_scale=cm.device_scale.copy(),
+    )

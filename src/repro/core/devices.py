@@ -1,0 +1,251 @@
+"""Heterogeneous device & cluster model (paper §III-A).
+
+Heterogeneity is three-fold: compute capability, memory capacity, and
+pairwise communication bandwidth.  A cluster is a set of devices plus a
+(possibly sparse, possibly asymmetric) link-bandwidth matrix; devices that
+are not directly connected communicate over a multi-hop channel whose
+bandwidth is the minimum along the path (paper Fig. 3).  We close the link
+graph into a full mesh with a *widest-path* (max-bottleneck) Floyd–Warshall,
+which picks the best multi-hop route — exactly the paper's A→B→D→F example.
+
+Presets copy the paper's Table III testbeds and add TPU-native clusters
+(the hardware adaptation target).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+GB = 1e9
+GBPS = 1e9 / 8.0  # 1 Gbit/s in bytes/s
+
+
+@dataclass(frozen=True)
+class DeviceSpec:
+    """One schedulable device (a GPU, or a TPU slice treated as a unit)."""
+
+    name: str
+    peak_flops: float          # FLOP/s (dtype-appropriate peak)
+    mem_bytes: float           # memory capacity
+    hbm_bw: float              # bytes/s local memory bandwidth
+    kind: str = "gpu"          # "gpu" | "tpu_slice" | "cpu"
+
+
+@dataclass
+class ClusterSpec:
+    """Devices + directed link bandwidths (bytes/s). 0 / missing = no direct link."""
+
+    devices: List[DeviceSpec]
+    link_bw: np.ndarray                      # [K, K] direct-link bandwidth, bytes/s
+    link_latency: Optional[np.ndarray] = None  # [K, K] seconds, optional
+    name: str = "cluster"
+
+    def __post_init__(self):
+        k = len(self.devices)
+        self.link_bw = np.asarray(self.link_bw, dtype=np.float64)
+        assert self.link_bw.shape == (k, k), "link_bw must be KxK"
+        if self.link_latency is None:
+            self.link_latency = np.zeros((k, k), dtype=np.float64)
+        self._closure: Optional[Tuple[np.ndarray, np.ndarray]] = None
+
+    @property
+    def k(self) -> int:
+        return len(self.devices)
+
+    # ------------------------------------------------------------- closure
+    def _widest_path_closure(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Full-mesh effective bandwidth/latency via max-bottleneck paths.
+
+        bw[i,j]  = max over paths of (min link bw on path)     (paper §III-C)
+        lat[i,j] = latency along the chosen path (sum of hops)
+        """
+        k = self.k
+        bw = self.link_bw.copy()
+        lat = np.where(bw > 0, self.link_latency, np.inf)
+        np.fill_diagonal(bw, np.inf)
+        np.fill_diagonal(lat, 0.0)
+        for m in range(k):
+            # path i -> m -> j has bottleneck min(bw[i,m], bw[m,j])
+            cand = np.minimum(bw[:, m : m + 1], bw[m : m + 1, :])
+            cand_lat = lat[:, m : m + 1] + lat[m : m + 1, :]
+            better = cand > bw
+            bw = np.where(better, cand, bw)
+            lat = np.where(better, cand_lat, lat)
+        return bw, lat
+
+    def effective_bw(self, src: int, dst: int) -> float:
+        """Effective (possibly multi-hop) bandwidth src→dst in bytes/s."""
+        if src == dst:
+            return math.inf
+        if self._closure is None:
+            self._closure = self._widest_path_closure()
+        return float(self._closure[0][src, dst])
+
+    def effective_latency(self, src: int, dst: int) -> float:
+        if src == dst:
+            return 0.0
+        if self._closure is None:
+            self._closure = self._widest_path_closure()
+        return float(self._closure[1][src, dst])
+
+    def comm_time(self, nbytes: float, src: int, dst: int) -> float:
+        """Transfer time of ``nbytes`` over the (src,dst) channel (paper §III-C)."""
+        if src == dst or nbytes <= 0:
+            return 0.0
+        bw = self.effective_bw(src, dst)
+        if bw <= 0:
+            return math.inf
+        return self.effective_latency(src, dst) + nbytes / bw
+
+    def is_connected(self) -> bool:
+        if self._closure is None:
+            self._closure = self._widest_path_closure()
+        return bool(np.all(self._closure[0] > 0))
+
+    # -------------------------------------------------------------- elastic
+    def without_device(self, idx: int) -> "ClusterSpec":
+        """Cluster minus one failed device (elastic re-placement support)."""
+        keep = [i for i in range(self.k) if i != idx]
+        return ClusterSpec(
+            devices=[self.devices[i] for i in keep],
+            link_bw=self.link_bw[np.ix_(keep, keep)],
+            link_latency=self.link_latency[np.ix_(keep, keep)],
+            name=f"{self.name}-dev{idx}",
+        )
+
+
+# --------------------------------------------------------------------------
+# Presets
+# --------------------------------------------------------------------------
+
+
+def inter_server_cluster() -> ClusterSpec:
+    """Paper Table III, inter-server scenario: 4 GPUs over 100G InfiniBand.
+
+    Asymmetric measured bandwidths (Gbps) copied from the table.
+    """
+    devices = [
+        DeviceSpec("RTX2080Ti", peak_flops=13.45e12, mem_bytes=11 * GB, hbm_bw=616e9),
+        DeviceSpec("TeslaT4", peak_flops=8.14e12, mem_bytes=16 * GB, hbm_bw=300e9),
+        DeviceSpec("TeslaP4", peak_flops=5.5e12, mem_bytes=8 * GB, hbm_bw=192e9),
+        DeviceSpec("RTX3060Ti", peak_flops=16.2e12, mem_bytes=8 * GB, hbm_bw=448e9),
+    ]
+    bw_gbps = np.array(
+        [
+            [0.0, 44.26, 32.92, 44.28],
+            [42.39, 0.0, 35.32, 44.51],
+            [33.20, 35.31, 0.0, 32.95],
+            [42.08, 43.22, 33.28, 0.0],
+        ]
+    )
+    lat = np.full((4, 4), 5e-6)
+    np.fill_diagonal(lat, 0.0)
+    return ClusterSpec(devices, bw_gbps * GBPS, lat, name="inter-server")
+
+
+def intra_server_cluster() -> ClusterSpec:
+    """Paper Table III, intra-server scenario: 2×V100 + 2×P100 over NVLink/NVSwitch."""
+    devices = [
+        DeviceSpec("V100-a", peak_flops=15.7e12, mem_bytes=32 * GB, hbm_bw=900e9),
+        DeviceSpec("V100-b", peak_flops=15.7e12, mem_bytes=32 * GB, hbm_bw=900e9),
+        DeviceSpec("P100-a", peak_flops=9.3e12, mem_bytes=16 * GB, hbm_bw=732e9),
+        DeviceSpec("P100-b", peak_flops=9.3e12, mem_bytes=16 * GB, hbm_bw=732e9),
+    ]
+    bw_gbps = np.array(
+        [
+            [0.0, 1170.04, 626.10, 610.56],
+            [1148.16, 0.0, 618.98, 581.09],
+            [630.43, 609.82, 0.0, 571.96],
+            [622.67, 575.08, 581.35, 0.0],
+        ]
+    )
+    lat = np.full((4, 4), 2e-6)
+    np.fill_diagonal(lat, 0.0)
+    return ClusterSpec(devices, bw_gbps * GBPS, lat, name="intra-server")
+
+
+# TPU v5e constants (the adaptation target; also used by launch/roofline.py)
+TPU_V5E_PEAK_BF16 = 197e12      # FLOP/s per chip
+TPU_V5E_HBM_BW = 819e9          # bytes/s per chip
+TPU_V5E_HBM_BYTES = 16 * GB     # per chip
+TPU_ICI_BW = 50e9               # bytes/s per link (per direction)
+TPU_DCN_BW = 25e9 / 8 * 8       # ~25 GB/s host DCN (inter-pod)
+
+
+def tpu_slice_cluster(
+    n_slices: int = 4,
+    chips_per_slice: int = 4,
+    *,
+    inter_slice_bw: float = TPU_ICI_BW,
+    heterogeneous: bool = False,
+) -> ClusterSpec:
+    """A TPU pod viewed as ``n_slices`` schedulable slices (Moirai devices).
+
+    ``heterogeneous=True`` alternates v5e-like and half-speed (older-gen)
+    slices — the mixed-generation fleet case Moirai targets.
+    """
+    devices = []
+    for i in range(n_slices):
+        derate = 0.5 if (heterogeneous and i % 2 == 1) else 1.0
+        devices.append(
+            DeviceSpec(
+                f"slice{i}",
+                peak_flops=TPU_V5E_PEAK_BF16 * chips_per_slice * derate,
+                mem_bytes=TPU_V5E_HBM_BYTES * chips_per_slice,
+                hbm_bw=TPU_V5E_HBM_BW * chips_per_slice * derate,
+                kind="tpu_slice",
+            )
+        )
+    # ring topology over ICI; widest-path closure handles the rest
+    bw = np.zeros((n_slices, n_slices))
+    for i in range(n_slices):
+        j = (i + 1) % n_slices
+        bw[i, j] = bw[j, i] = inter_slice_bw
+    lat = np.full((n_slices, n_slices), 1e-6)
+    np.fill_diagonal(lat, 0.0)
+    return ClusterSpec(devices, bw, lat, name=f"tpu-{n_slices}x{chips_per_slice}")
+
+
+def multi_pod_cluster(n_pods: int = 2, slices_per_pod: int = 4) -> ClusterSpec:
+    """Pods of TPU slices: fast ICI inside a pod, slow DCN between pods."""
+    n = n_pods * slices_per_pod
+    devices = []
+    bw = np.zeros((n, n))
+    for p in range(n_pods):
+        base = p * slices_per_pod
+        for s in range(slices_per_pod):
+            devices.append(
+                DeviceSpec(
+                    f"pod{p}/slice{s}",
+                    peak_flops=TPU_V5E_PEAK_BF16 * 4,
+                    mem_bytes=TPU_V5E_HBM_BYTES * 4,
+                    hbm_bw=TPU_V5E_HBM_BW * 4,
+                    kind="tpu_slice",
+                )
+            )
+        for s in range(slices_per_pod):
+            t = (s + 1) % slices_per_pod
+            bw[base + s, base + t] = bw[base + t, base + s] = TPU_ICI_BW
+    # one DCN uplink between pod p slice0 and pod p+1 slice0
+    for p in range(n_pods - 1):
+        a, b = p * slices_per_pod, (p + 1) * slices_per_pod
+        bw[a, b] = bw[b, a] = TPU_DCN_BW
+    lat = np.full((n, n), 1e-6)
+    np.fill_diagonal(lat, 0.0)
+    return ClusterSpec(devices, bw, lat, name=f"tpu-{n_pods}pods")
+
+
+PRESETS = {
+    "inter_server": inter_server_cluster,
+    "intra_server": intra_server_cluster,
+    "tpu_slices": tpu_slice_cluster,
+    "tpu_multi_pod": multi_pod_cluster,
+}
+
+
+def get_cluster(name: str, **kw) -> ClusterSpec:
+    return PRESETS[name](**kw)

@@ -1,0 +1,205 @@
+"""Heuristic device-placement baselines the paper compares against.
+
+* ``etf``  — classic Earliest Task First list scheduling, communication-aware
+  (Hwang et al.), extended with memory feasibility.
+* ``getf`` — GETF [Su et al., arXiv:2004.14639]: ETF generalized to *related*
+  (heterogeneously fast) machines via group assignment: tasks are first
+  mapped to machine *speed groups* by a work-threshold rule, then ETF runs
+  restricted to each task's group (our implementation of the paper's
+  description; the original's LP grouping is approximated by the
+  work-threshold rule, documented in DESIGN.md).
+* ``msct`` — m-SCT from Baechi [Jeon et al., SoCC'20]: Small-Communication-
+  Time scheduling; each task designates a *favorite child* (the successor
+  whose co-location saves the largest communication cost); a device that
+  finishes task i prefers i's favorite child, otherwise falls back to the
+  earliest-start rule.  Memory-capped per device as in Baechi.
+* ``round_robin`` / ``single_device`` — sanity baselines.
+
+All heuristics return a ``PlacementResult`` whose ``objective`` is their own
+internal schedule estimate; benchmarks re-evaluate every method through the
+same event simulator for fairness.
+"""
+
+from __future__ import annotations
+
+import time as _time
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from .costmodel import CostModel
+from .graph import OpGraph
+from .milp import PlacementResult
+
+
+def _comm_ready_time(
+    cost: CostModel,
+    graph: OpGraph,
+    nid: int,
+    k: int,
+    placement: Dict[int, int],
+    end: Dict[int, float],
+) -> float:
+    """Earliest time all inputs of ``nid`` are available on device ``k``."""
+    t = 0.0
+    for p in graph.nodes[nid].inputs:
+        arr = end[p] + cost.comm_time(graph.nodes[p].output_bytes, placement[p], k)
+        t = max(t, arr)
+    return t
+
+
+def _greedy_list_schedule(
+    graph: OpGraph,
+    cost: CostModel,
+    *,
+    eligible: Optional[Dict[int, List[int]]] = None,
+    favorite: Optional[Dict[int, int]] = None,
+    name: str = "etf",
+) -> PlacementResult:
+    """Shared engine for ETF/GETF/m-SCT: pick (ready task, device) with the
+    earliest finish, respecting memory; ``eligible`` restricts device choices
+    per task; ``favorite`` gives m-SCT's co-location preference."""
+    t0 = _time.perf_counter()
+    K = cost.cluster.k
+    caps = np.array([d.mem_bytes for d in cost.cluster.devices])
+    usage = np.zeros(K)
+
+    indeg = {nid: len(n.inputs) for nid, n in graph.nodes.items()}
+    ready: Set[int] = {nid for nid, d in indeg.items() if d == 0}
+    placement: Dict[int, int] = {}
+    start: Dict[int, float] = {}
+    end: Dict[int, float] = {}
+    dev_free = np.zeros(K)
+    last_on_dev: Dict[int, int] = {}  # device -> last scheduled op
+
+    n_total = len(graph.nodes)
+    while len(placement) < n_total:
+        # candidate (start_time, finish_time, task, device)
+        best = None
+        for nid in ready:
+            node = graph.nodes[nid]
+            devs = eligible.get(nid, list(range(K))) if eligible else range(K)
+            for k in devs:
+                if usage[k] + node.param_bytes > caps[k]:
+                    continue
+                s = max(dev_free[k], _comm_ready_time(cost, graph, nid, k, placement, end))
+                f = s + cost.compute_time(node, k)
+                # m-SCT preference: a device whose last op designated nid as
+                # favorite child gets a tie-breaking bonus (co-location)
+                fav_bonus = (
+                    favorite is not None
+                    and favorite.get(last_on_dev.get(k, -1)) == nid
+                )
+                key = (s, not fav_bonus, f, nid, k)
+                if best is None or key < best[0]:
+                    best = (key, nid, k, s, f)
+        if best is None:
+            # all ready tasks are memory-blocked everywhere: relax memory on
+            # the least-used device (flagged infeasible)
+            nid = min(ready)
+            k = int(np.argmin(usage))
+            s = max(dev_free[k], _comm_ready_time(cost, graph, nid, k, placement, end))
+            f = s + cost.compute_time(graph.nodes[nid], k)
+            best = (None, nid, k, s, f)
+        _, nid, k, s, f = best
+        placement[nid] = k
+        start[nid], end[nid] = s, f
+        usage[k] += graph.nodes[nid].param_bytes
+        dev_free[k] = f
+        last_on_dev[k] = nid
+        ready.discard(nid)
+        for succ in graph.nodes[nid].outputs:
+            indeg[succ] -= 1
+            if indeg[succ] == 0:
+                ready.add(succ)
+
+    feasible = bool(np.all(usage <= caps))
+    return PlacementResult(
+        placement=placement,
+        objective=max(end.values()) if end else 0.0,
+        status="feasible" if feasible else "memory-relaxed",
+        mip_gap=float("nan"),
+        solve_time=_time.perf_counter() - t0,
+        method=name,
+        start_times=start,
+        end_times=end,
+    )
+
+
+def etf(graph: OpGraph, cost: CostModel) -> PlacementResult:
+    return _greedy_list_schedule(graph, cost, name="etf")
+
+
+def getf(graph: OpGraph, cost: CostModel) -> PlacementResult:
+    """GETF: group machines by speed; heavy tasks are restricted to the fast
+    group, light tasks may go anywhere (the work-threshold grouping)."""
+    K = cost.cluster.k
+    speeds = np.array([d.peak_flops for d in cost.cluster.devices])
+    fast = set(np.argsort(-speeds)[: max(1, K // 2)].tolist())
+    flops = np.array([graph.nodes[n].flops for n in graph.nodes])
+    thresh = float(np.quantile(flops, 0.75)) if len(flops) else 0.0
+    eligible = {
+        nid: (sorted(fast) if graph.nodes[nid].flops >= thresh and thresh > 0 else list(range(K)))
+        for nid in graph.nodes
+    }
+    return _greedy_list_schedule(graph, cost, eligible=eligible, name="getf")
+
+
+def msct(graph: OpGraph, cost: CostModel) -> PlacementResult:
+    """m-SCT: favorite child = the most *critical* successor (largest
+    bottom-level, i.e. longest remaining path to a sink) — co-locating it
+    saves its input communication on the critical path, per Hanen–Munier SCT
+    as used in Baechi."""
+    K = cost.cluster.k
+    mean_t = {
+        nid: float(np.mean([cost.compute_time(n, k) for k in range(K)]))
+        for nid, n in graph.nodes.items()
+    }
+    bottom: Dict[int, float] = {}
+    for nid in reversed(graph.topo_order()):
+        node = graph.nodes[nid]
+        bottom[nid] = mean_t[nid] + max((bottom[s] for s in node.outputs), default=0.0)
+    favorite: Dict[int, int] = {}
+    for nid, node in graph.nodes.items():
+        if node.outputs:
+            favorite[nid] = max(node.outputs, key=lambda s: (bottom[s], -s))
+    return _greedy_list_schedule(graph, cost, favorite=favorite, name="m-sct")
+
+
+def round_robin(graph: OpGraph, cost: CostModel) -> PlacementResult:
+    t0 = _time.perf_counter()
+    order = graph.topo_order()
+    placement = {nid: i % cost.cluster.k for i, nid in enumerate(order)}
+    return PlacementResult(
+        placement=placement,
+        objective=float("nan"),
+        status="feasible" if cost.memory_ok(graph, placement) else "memory-relaxed",
+        mip_gap=float("nan"),
+        solve_time=_time.perf_counter() - t0,
+        method="round-robin",
+    )
+
+
+def single_device(graph: OpGraph, cost: CostModel, k: Optional[int] = None) -> PlacementResult:
+    t0 = _time.perf_counter()
+    if k is None:
+        # fastest device that fits the whole model, else the biggest-memory one
+        total = graph.total_param_bytes()
+        fits = [
+            i
+            for i, d in enumerate(cost.cluster.devices)
+            if d.mem_bytes >= total
+        ]
+        if fits:
+            k = max(fits, key=lambda i: cost.cluster.devices[i].peak_flops)
+        else:
+            k = int(np.argmax([d.mem_bytes for d in cost.cluster.devices]))
+    placement = {nid: k for nid in graph.nodes}
+    return PlacementResult(
+        placement=placement,
+        objective=float("nan"),
+        status="feasible" if cost.memory_ok(graph, placement) else "memory-relaxed",
+        mip_gap=float("nan"),
+        solve_time=_time.perf_counter() - t0,
+        method=f"single-device[{k}]",
+    )

@@ -1,0 +1,201 @@
+"""Public placement API: the four Moirai steps (Fig. 2) behind one call.
+
+    input profiling → graph coarsening → problem modeling → problem solving
+
+``plan()`` runs the full pipeline for any method; ``replan()`` supports
+elastic serving (device failure / cluster resize) by re-solving on the
+surviving devices — placement is fast relative to model lifetime, which is
+exactly the regime the paper targets (offline placement, online serving).
+"""
+
+from __future__ import annotations
+
+import time as _time
+from dataclasses import dataclass
+from typing import Dict, Iterable, Optional, Sequence
+
+from .costmodel import CostModel
+from .devices import ClusterSpec
+from .fusion import DEFAULT_RULES, gcof
+from .graph import OpGraph
+from .heuristics import etf, getf, msct, round_robin, single_device
+from .hierarchy import (
+    _count_unordered_pairs,
+    chain_contract,
+    cluster_graph,
+    lift_placement,
+)
+from .milp import PlacementResult, solve_placement
+
+# graphs larger than this go through hierarchical clustering before the MILP
+MILP_EXACT_MAX_NODES = 48
+
+
+@dataclass
+class PlanConfig:
+    method: str = "moirai"           # moirai|etf|getf|msct|placeto|round_robin|single
+    coarsen: bool = True             # GCOF (Fig. 10 c/d vs a/b)
+    rules: Optional[Sequence[Sequence[str]]] = None
+    time_limit: float = 120.0
+    mip_rel_gap: float = 1e-3
+    congestion: bool = True
+    max_exact_nodes: int = MILP_EXACT_MAX_NODES
+    max_chain_nodes: int = 400       # chain-contracted graphs up to this size
+    pair_budget: int = 2500          # max non-overlap binaries for exact MILP
+    placeto_iters: int = 150
+    seed: int = 0
+
+
+def plan(
+    graph: OpGraph,
+    cluster: ClusterSpec,
+    config: Optional[PlanConfig] = None,
+    *,
+    cost: Optional[CostModel] = None,
+    **overrides,
+) -> PlacementResult:
+    """Place ``graph`` on ``cluster``; returns placement over ORIGINAL node ids."""
+    cfg = config or PlanConfig()
+    for k, v in overrides.items():
+        setattr(cfg, k, v)
+    cost = cost or CostModel(cluster)
+
+    t0 = _time.perf_counter()
+    rules = cfg.rules if cfg.rules is not None else DEFAULT_RULES
+
+    # ------------------------------------------------ step 2: coarsening
+    work = gcof(graph, rules) if cfg.coarsen else graph
+    # map coarse node -> original members for lifting back
+    members = {
+        nid: (node.fused_ids if node.fused_ids else (nid,))
+        for nid, node in work.nodes.items()
+    }
+
+    # ------------------------------------------- steps 3+4: model & solve
+    if cfg.method == "moirai":
+        target = work
+        member_to_super = None
+        if len(work) > cfg.max_exact_nodes:
+            # two-stage decomposition: chain contraction first (keeps parallel
+            # branches placeable — topo windows would collapse them), exact
+            # MILP if the unordered-pair count stays tractable, windows only
+            # as the last resort
+            chained, chain_map = chain_contract(work)
+            pairs = _count_unordered_pairs(chained, cfg.pair_budget)
+            if (
+                len(chained) <= cfg.max_chain_nodes
+                and pairs <= cfg.pair_budget
+            ):
+                target, member_to_super = chained, chain_map
+            else:
+                target, member_to_super = cluster_graph(work, cfg.max_exact_nodes)
+        # prime the exact solve with the best heuristic schedule: a greedy
+        # list schedule satisfies every MILP constraint family, so its
+        # makespan is a valid incumbent bound (T ≤ UB) and a tight big-M
+        from .simulate import simulate as _sim
+
+        # UB prime for the MILP: best heuristic schedule ON THE TARGET graph
+        ub = None
+        for h in (msct, etf, getf):
+            r = h(target, cost)
+            if r.status == "feasible":
+                mk = _sim(target, r.placement, cost).makespan
+                ub = mk if ub is None else min(ub, mk)
+        res = solve_placement(
+            target,
+            cost,
+            time_limit=cfg.time_limit,
+            mip_rel_gap=cfg.mip_rel_gap,
+            congestion=cfg.congestion,
+            upper_bound=ub,
+        )
+        if member_to_super is not None and res.placement:
+            coarse_placement = lift_placement(member_to_super, res.placement)
+            res.extra["hierarchical"] = True
+            res.extra["supernodes"] = len(target)
+        else:
+            coarse_placement = res.placement
+
+        # envelope on the UNCONTRACTED work graph: under a bounded solver
+        # budget (and through lossy contraction) the MILP route may not beat
+        # a plain list schedule — Moirai returns whichever placement
+        # simulates faster, so Moirai ≥ best heuristic always holds (with
+        # unbounded budget the exact MILP alone is optimal, as in the paper)
+        mk_milp = (
+            _sim(work, coarse_placement, cost).makespan
+            if coarse_placement
+            else float("inf")
+        )
+        best_h, mk_h = None, float("inf")
+        for h in (msct, etf, getf):
+            r = h(work, cost)
+            if r.status != "feasible":
+                continue
+            mk = _sim(work, r.placement, cost).makespan
+            if mk < mk_h:
+                best_h, mk_h = r, mk
+        if best_h is not None and mk_h < mk_milp:
+            best_h.method = f"moirai[envelope={best_h.method}]"
+            best_h.extra["milp_makespan"] = mk_milp
+            best_h.extra["envelope_makespan"] = mk_h
+            res = best_h
+            coarse_placement = res.placement
+        else:
+            res.extra["envelope_makespan"] = mk_milp
+            res.extra["heuristic_best"] = mk_h
+    elif cfg.method == "etf":
+        res = etf(work, cost)
+        coarse_placement = res.placement
+    elif cfg.method == "getf":
+        res = getf(work, cost)
+        coarse_placement = res.placement
+    elif cfg.method == "msct":
+        res = msct(work, cost)
+        coarse_placement = res.placement
+    elif cfg.method == "placeto":
+        from .placeto import placeto  # lazy: pulls in jax
+
+        res = placeto(work, cost, iters=cfg.placeto_iters, seed=cfg.seed)
+        coarse_placement = res.placement
+    elif cfg.method == "round_robin":
+        res = round_robin(work, cost)
+        coarse_placement = res.placement
+    elif cfg.method == "single":
+        res = single_device(work, cost)
+        coarse_placement = res.placement
+    else:
+        raise ValueError(f"unknown placement method {cfg.method!r}")
+
+    # ------------------------------------------------- lift to original ids
+    placement = {
+        orig: coarse_placement[cid]
+        for cid, origs in members.items()
+        for orig in origs
+    }
+    res.placement = placement
+    res.solve_time = _time.perf_counter() - t0
+    res.extra["coarsened"] = cfg.coarsen
+    res.extra["n_original"] = len(graph)
+    res.extra["n_coarse"] = len(work)
+    return res
+
+
+def replan(
+    graph: OpGraph,
+    cluster: ClusterSpec,
+    failed_device: int,
+    config: Optional[PlanConfig] = None,
+) -> PlacementResult:
+    """Elastic re-placement after losing ``failed_device``.
+
+    Returns a placement over the SURVIVING device indices of the *original*
+    cluster (so the executor can keep its device handles)."""
+    surviving = [i for i in range(cluster.k) if i != failed_device]
+    sub = cluster.without_device(failed_device)
+    res = plan(graph, sub, config)
+    res.placement = {nid: surviving[k] for nid, k in res.placement.items()}
+    res.extra["failed_device"] = failed_device
+    return res
+
+
+METHODS = ("moirai", "etf", "getf", "msct", "placeto", "round_robin", "single")

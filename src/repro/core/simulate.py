@@ -1,0 +1,231 @@
+"""Event-driven makespan simulator for a placed computation graph.
+
+This is the framework's stand-in for the paper's wall-clock end-to-end
+latency measurements (no heterogeneous GPU cluster exists in this container)
+and is also used at runtime by the serving engine for admission planning and
+straggler hedging.  Semantics match the paper's execution model:
+
+* operators on one device run **sequentially** (non-overlap, Eq. 6) — a TPU
+  core / CUDA stream executes one kernel at a time;
+* a data flow whose endpoints share a device costs zero (z_q = 0, Eq. 7);
+* flows on the same directed channel (k', k'') serialize (congestion, Eq. 8);
+* compute and communication of *different* devices overlap freely.
+
+The scheduler is earliest-ready-first per resource (classic list scheduling),
+which is how PyTorch/XLA actually dispatch a placed graph.  The simulator
+returns the full schedule so tests can verify every MILP constraint holds.
+"""
+
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional, Tuple
+
+from .costmodel import CostModel
+from .graph import AugmentedDAG, OpGraph, augment
+
+
+@dataclass
+class TaskRecord:
+    task_id: int            # op id, or comm id (from the augmented DAG)
+    kind: str               # "op" | "comm"
+    resource: Tuple         # ("dev", k) or ("chan", src_dev, dst_dev)
+    start: float
+    end: float
+
+
+@dataclass
+class SimResult:
+    makespan: float
+    schedule: Dict[int, TaskRecord]
+    aug: AugmentedDAG
+
+    def device_busy(self, k: int) -> float:
+        return sum(
+            r.end - r.start
+            for r in self.schedule.values()
+            if r.resource == ("dev", k)
+        )
+
+
+def simulate(
+    graph: OpGraph,
+    placement: Mapping[int, int],
+    cost: CostModel,
+    *,
+    aug: Optional[AugmentedDAG] = None,
+    priority: Optional[Mapping[int, float]] = None,
+) -> SimResult:
+    """Simulate ``graph`` under ``placement`` (op id -> device idx).
+
+    ``priority`` (lower = sooner) overrides the earliest-ready-first dispatch
+    order per resource — used to execute the MILP's own schedule order (the
+    runtime dispatches tasks in the solver's S_i order)."""
+    aug = aug or augment(graph)
+
+    # --- task table -------------------------------------------------------
+    # op tasks: duration p_ik on their device
+    # comm tasks: duration p_comm on channel (dev(src), dev(dst)); 0 if same dev
+    dur: Dict[int, float] = {}
+    resource: Dict[int, Tuple] = {}
+    deps: Dict[int, List[int]] = {}      # task -> prerequisite tasks
+    fanout: Dict[int, List[int]] = {}    # task -> dependents
+
+    for nid, node in graph.nodes.items():
+        k = placement[nid]
+        dur[nid] = cost.compute_time(node, k)
+        resource[nid] = ("dev", k)
+        deps[nid] = []
+        fanout.setdefault(nid, [])
+
+    for q, c in aug.comm.items():
+        ks, kd = placement[c.src], placement[c.dst]
+        if ks == kd:
+            dur[q] = 0.0
+            resource[q] = ("local",)  # zero-cost, no resource contention
+        else:
+            dur[q] = cost.comm_time(c.bytes, ks, kd)
+            resource[q] = ("chan", ks, kd)
+        deps[q] = [c.src]
+        fanout.setdefault(q, []).append(c.dst)
+        fanout.setdefault(c.src, []).append(q)
+        deps[c.dst].append(q)
+
+    n_deps = {t: len(d) for t, d in deps.items()}
+
+    # --- event loop -------------------------------------------------------
+    # ready[resource] = heap of (ready_time, task_id)
+    ready: Dict[Tuple, List[Tuple[float, int]]] = {}
+    free_at: Dict[Tuple, float] = {}
+    running: Dict[Tuple, Optional[int]] = {}
+
+    events: List[Tuple[float, int, int]] = []  # (time, seq, task) completions
+    seq = 0
+    schedule: Dict[int, TaskRecord] = {}
+    completed: Dict[int, float] = {}
+
+    def push_ready(task: int, t: float):
+        nonlocal seq
+        res = resource[task]
+        if res == ("local",) or dur[task] == 0.0:
+            # zero-duration: complete instantly at its ready time
+            heapq.heappush(events, (t, seq, task))
+            seq += 1
+            schedule[task] = TaskRecord(task, _kind(task), res, t, t)
+            return
+        ready.setdefault(res, [])
+        rank = priority.get(task, t) if priority is not None else t
+        heapq.heappush(ready[res], (rank, t, task))
+        try_start(res, t)
+
+    def _kind(task: int) -> str:
+        return "op" if task in graph.nodes else "comm"
+
+    def try_start(res: Tuple, now: float):
+        nonlocal seq
+        if running.get(res) is not None:
+            return
+        q = ready.get(res)
+        if not q:
+            return
+        _, rt, task = heapq.heappop(q)
+        start = max(rt, free_at.get(res, 0.0), now)
+        end = start + dur[task]
+        running[res] = task
+        schedule[task] = TaskRecord(task, _kind(task), res, start, end)
+        heapq.heappush(events, (end, seq, task))
+        seq += 1
+
+    # seed: tasks with no prerequisites
+    for t, nd in n_deps.items():
+        if nd == 0:
+            push_ready(t, 0.0)
+
+    makespan = 0.0
+    while events:
+        t, _, task = heapq.heappop(events)
+        makespan = max(makespan, t)
+        completed[task] = t
+        res = resource[task]
+        if res != ("local",) and dur[task] > 0.0:
+            running[res] = None
+            free_at[res] = t
+        for dep in fanout.get(task, []):
+            n_deps[dep] -= 1
+            if n_deps[dep] == 0:
+                push_ready(dep, t)
+        if res != ("local",) and dur[task] > 0.0:
+            try_start(res, t)
+
+    if len(completed) != len(dur):
+        missing = set(dur) - set(completed)
+        raise RuntimeError(f"simulation deadlock; unfinished tasks: {sorted(missing)[:10]}")
+
+    return SimResult(makespan=makespan, schedule=schedule, aug=aug)
+
+
+# --------------------------------------------------------------------------
+# Validation: assert a simulated schedule obeys every MILP constraint family.
+# Used by property tests and by the MILP solver's self-check.
+# --------------------------------------------------------------------------
+
+
+def validate_schedule(
+    graph: OpGraph,
+    placement: Mapping[int, int],
+    cost: CostModel,
+    result: SimResult,
+    *,
+    atol: float = 1e-9,
+) -> None:
+    sched = result.schedule
+    aug = result.aug
+
+    # (4a) precedence through comm nodes
+    for (u, v), q in aug.edge_to_comm.items():
+        assert sched[u].end <= sched[q].start + atol, f"flow {q} starts before {u} ends"
+        assert sched[q].end <= sched[v].start + atol, f"op {v} starts before flow {q} ends"
+
+    # (4c) every op placed on exactly one valid device
+    for nid in graph.nodes:
+        assert 0 <= placement[nid] < cost.cluster.k
+
+    # (5) memory
+    assert cost.memory_ok(graph, placement), "memory constraint violated"
+
+    # (6) non-overlap per device; (8) non-overlap per channel
+    by_res: Dict[Tuple, List[TaskRecord]] = {}
+    for r in sched.values():
+        if r.resource != ("local",) and r.end > r.start:
+            by_res.setdefault(r.resource, []).append(r)
+    for res, recs in by_res.items():
+        recs.sort(key=lambda r: r.start)
+        for a, b in zip(recs, recs[1:]):
+            assert a.end <= b.start + atol, (
+                f"overlap on {res}: task {a.task_id} [{a.start},{a.end}] vs "
+                f"task {b.task_id} [{b.start},{b.end}]"
+            )
+
+    # (7) zero-cost same-device flows
+    for q, c in aug.comm.items():
+        if placement[c.src] == placement[c.dst]:
+            assert sched[q].end - sched[q].start <= atol
+
+
+def evaluate(
+    graph: OpGraph,
+    placement: Mapping[int, int],
+    cost: CostModel,
+    *,
+    runtime_fusion_rules=None,
+) -> float:
+    """Makespan of a placement; optionally apply backend runtime fusion first
+    (placements computed on the ORIGINAL graph still benefit from co-located
+    fusible chains — the paper's Fig. 10 a/b evaluation)."""
+    if runtime_fusion_rules is not None:
+        from .fusion import runtime_fuse
+
+        graph, placement = runtime_fuse(graph, dict(placement), runtime_fusion_rules)
+    return simulate(graph, placement, cost).makespan

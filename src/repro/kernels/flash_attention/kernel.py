@@ -1,0 +1,152 @@
+"""Flash-attention Pallas TPU kernel (online softmax, blockwise VMEM tiling).
+
+Grid: (batch·heads, Sq/BQ, Sk/BK).  On TPU the last grid axis runs
+sequentially per core, so the running max / denominator / accumulator live in
+VMEM scratch across the KV sweep — the classic flash recurrence:
+
+  m'   = max(m, rowmax(S))
+  l'   = l·e^{m−m'} + rowsum(e^{S−m'})
+  acc' = acc·e^{m−m'} + e^{S−m'}·V
+
+Features: causal masking, sliding window (gemma2 local layers), score
+soft-capping, GQA handled by the ops.py wrapper (KV streamed per group,
+never repeated in memory).  Query/key positions are affine in the block
+indices (pos = block_idx·B + iota + offset), so masks are computed from
+``program_id`` — no position operands.  BQ=BK=128 blocks align with the
+128×128 MXU; ops.py pads head_dim to a lane multiple.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,      # [BQ, D]
+    k_ref,      # [BK, D]
+    v_ref,      # [BK, D]
+    o_ref,      # [BQ, D]
+    m_scr,      # VMEM [BQ, 1]    running max
+    l_scr,      # VMEM [BQ, 1]    running denominator
+    acc_scr,    # VMEM [BQ, D]    running numerator
+    *,
+    scale: float,
+    causal: bool,
+    window: int,          # 0 = none
+    softcap: float,       # 0 = none
+    q_offset: int,        # absolute position of query row 0
+    k_len: int,           # valid key count (padding beyond is masked)
+    n_kv_blocks: int,
+    block_q: int,
+    block_k: int,
+):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                             # [BQ, BK]
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    qp = (
+        qi * block_q
+        + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        + q_offset
+    )
+    kp = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = kp < k_len                        # sequence padding is never visible
+    if causal:
+        mask &= kp <= qp
+    if window > 0:
+        mask &= kp > qp - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...][:, 0]
+    l_prev = l_scr[...][:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+
+    v = v_ref[...].astype(jnp.float32)
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
+    m_scr[...] = m_new[:, None]
+    l_scr[...] = l_new[:, None]
+
+    @pl.when(kj == n_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[...] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,            # [BH, Sq, D]
+    k: jax.Array,            # [BH, Sk, D]
+    v: jax.Array,            # [BH, Sk, D]
+    *,
+    scale: float,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_offset: int = 0,
+    k_len: int = 0,          # 0 → all keys valid
+    block_q: int = DEFAULT_BQ,
+    block_k: int = DEFAULT_BK,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    n_q = sq // block_q
+    n_k = sk // block_k
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        window=int(window or 0),
+        softcap=float(softcap or 0.0),
+        q_offset=int(q_offset),
+        k_len=int(k_len) if k_len else sk,
+        n_kv_blocks=n_k,
+        block_q=block_q,
+        block_k=block_k,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((None, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((None, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

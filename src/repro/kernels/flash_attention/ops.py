@@ -1,0 +1,87 @@
+"""jit'd wrapper: model-layout [B,S,H,D] GQA attention on the flash kernel.
+
+Handles GQA head grouping (queries of one KV head's group are folded into
+the batch·kv_head axis — KV is streamed once per group, never repeated),
+head-dim padding to the 128-lane boundary, and sequence padding to block
+multiples.  On CPU the kernel runs in interpret mode (correctness path);
+on TPU it compiles to the real blockwise kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_BK, DEFAULT_BQ, flash_attention_pallas
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "softcap", "scale", "q_offset", "interpret",
+    ),
+)
+def flash_attention(
+    q: jax.Array,            # [B, Sq, H, D]
+    k: jax.Array,            # [B, Sk, KV, D]
+    v: jax.Array,            # [B, Sk, KV, D]
+    *,
+    scale: float,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    q_offset: int = 0,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = _interpret_default()
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    rep = h // kv
+
+    # fold GQA groups into the kernel's batch axis: [B·KV·rep, S, D]
+    qk = q.reshape(b, sq, kv, rep, d).transpose(0, 2, 3, 1, 4).reshape(b * kv * rep, sq, d)
+    kk = jnp.broadcast_to(
+        k.transpose(0, 2, 1, 3)[:, :, None], (b, kv, rep, sk, d)
+    ).reshape(b * kv * rep, sk, d)
+    vk = jnp.broadcast_to(
+        v.transpose(0, 2, 1, 3)[:, :, None], (b, kv, rep, sk, d)
+    ).reshape(b * kv * rep, sk, d)
+
+    # pad head_dim to the 128-lane boundary, sequences to block multiples
+    dp = (-d) % 128
+    if dp:
+        qk = jnp.pad(qk, ((0, 0), (0, 0), (0, dp)))
+        kk = jnp.pad(kk, ((0, 0), (0, 0), (0, dp)))
+        vk = jnp.pad(vk, ((0, 0), (0, 0), (0, dp)))
+    bq = min(DEFAULT_BQ, max(8, sq))
+    bk = min(DEFAULT_BK, max(8, sk))
+    sqp = (-sq) % bq
+    skp = (-sk) % bk
+    if sqp:
+        qk = jnp.pad(qk, ((0, 0), (0, sqp), (0, 0)))
+    if skp:
+        kk = jnp.pad(kk, ((0, 0), (0, skp), (0, 0)))
+        vk = jnp.pad(vk, ((0, 0), (0, skp), (0, 0)))
+
+    out = flash_attention_pallas(
+        qk, kk, vk,
+        scale=scale,
+        causal=causal,
+        window=int(window or 0),
+        softcap=float(softcap or 0.0),
+        q_offset=q_offset,
+        k_len=sk,
+        block_q=bq,
+        block_k=bk,
+        interpret=interpret,
+    )
+    out = out[:, :sq, :d]
+    return out.reshape(b, kv, rep, sq, d).transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d)

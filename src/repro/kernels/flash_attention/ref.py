@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,            # [BH, Sq, D]
+    k: jax.Array,            # [BH, Sk, D]
+    v: jax.Array,            # [BH, Sk, D]
+    *,
+    scale: float,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_offset: int = 0,
+) -> jax.Array:
+    sq, sk = q.shape[1], k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if softcap and softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = jnp.arange(sq)[:, None] + q_offset
+    kp = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kp <= qp
+    if window and window > 0:
+        mask &= kp > qp - window
+    s = jnp.where(mask[None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    # rows with no visible keys (can happen with tiny windows) → zeros
+    w = jnp.where(mask[None], w, 0.0)
+    return jnp.einsum("bqk,bkd->bqd", w.astype(v.dtype), v)

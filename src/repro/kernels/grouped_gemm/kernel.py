@@ -1,0 +1,89 @@
+"""Grouped (ragged) GEMM Pallas TPU kernel — the MoE expert matmul.
+
+Computes out[i] = x[i] @ w[g(i)] where rows are sorted by expert and
+``group_sizes`` gives each expert's row count (the exact contraction
+``jax.lax.ragged_dot`` performs — which is the ref oracle).
+
+Megablocks-style decomposition: ops.py pads each expert's row range up to a
+multiple of BLOCK_M and builds a ``block_expert`` map (one expert id per row
+block).  The kernel grid is (m_blocks, n_blocks, k_blocks); each step loads
+an [BM, BK] x-tile and the [BK, BN] slice of its block's expert weight into
+VMEM and accumulates in fp32 scratch — w's expert axis is indexed through
+the block map, so only the needed expert tile is ever fetched from HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 512
+
+
+def _gg_kernel(
+    be_ref,    # scalar-prefetch: block_expert [m_blocks] (SMEM)
+    x_ref,     # [BM, BK]
+    w_ref,     # [BN... actually [1, BK, BN] expert slice
+    o_ref,     # [BM, BN]
+    acc_scr,   # VMEM [BM, BN] fp32
+    *,
+    n_k_blocks: int,
+):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = x_ref[...]
+    w = w_ref[...]
+    acc_scr[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _fin():
+        o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+
+
+def grouped_gemm_pallas(
+    x: jax.Array,             # [M, K]  rows sorted & padded per expert block
+    w: jax.Array,             # [E, K, N]
+    block_expert: jax.Array,  # [M/BM] int32 — expert id of each row block
+    *,
+    block_m: int = BLOCK_M,
+    block_n: int = BLOCK_N,
+    block_k: int = BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    m, k = x.shape
+    e, k2, n = w.shape
+    assert k == k2 and m % block_m == 0
+    block_k = min(block_k, k)
+    assert k % block_k == 0 and n % block_n == 0, (k, n, block_k, block_n)
+    grid = (m // block_m, n // block_n, k // block_k)
+
+    kernel = functools.partial(_gg_kernel, n_k_blocks=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_m, block_k), lambda i, j, kk, be: (i, kk)),
+                pl.BlockSpec(
+                    (None, block_k, block_n), lambda i, j, kk, be: (be[i], kk, j)
+                ),
+            ],
+            out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk, be: (i, j)),
+            scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(block_expert, x, w)

@@ -1,0 +1,11 @@
+"""Oracle for the grouped GEMM: jax.lax.ragged_dot (the exact contraction)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def grouped_gemm_ref(x: jax.Array, w: jax.Array, group_sizes: jax.Array) -> jax.Array:
+    """x: [M, K] sorted by group; w: [E, K, N]; group_sizes: [E] → [M, N]."""
+    return jax.lax.ragged_dot(x, w, group_sizes.astype(jnp.int32))

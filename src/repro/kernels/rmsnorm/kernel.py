@@ -1,0 +1,57 @@
+"""Fused RMSNorm Pallas TPU kernel.
+
+One grid step normalizes a [ROWS_BLK, D] tile held in VMEM: the mean-square
+reduction, rsqrt, and scale all happen in registers/VMEM without an HBM
+round-trip for the intermediate — exactly the elementwise-chain fusion the
+paper's coarsening assumes the backend provides (rule ``add∘rmsnorm``).
+
+Weights are stored in offset form (1 + w), matching models/layers.rmsnorm.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS_BLK = 256
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)                 # [R, D] in VMEM
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(ms + eps)
+    o_ref[...] = (y * (1.0 + w_ref[...].astype(jnp.float32))).astype(o_ref.dtype)
+
+
+def rmsnorm_pallas(
+    x: jax.Array, w: jax.Array, *, eps: float = 1e-6, interpret: bool = False
+) -> jax.Array:
+    """x: [..., D]; w: [D] (offset form).  Rows are tiled ROWS_BLK at a time."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    pad = (-rows) % ROWS_BLK
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    n_blocks = x2.shape[0] // ROWS_BLK
+
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((ROWS_BLK, d), lambda i: (i, 0)),   # x tile → VMEM
+            pl.BlockSpec((d,), lambda i: (0,)),              # weights (resident)
+        ],
+        out_specs=pl.BlockSpec((ROWS_BLK, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
+        interpret=interpret,
+    )(x2, w)
+    if pad:
+        out = out[:rows]
+    return out.reshape(orig_shape)

@@ -1,0 +1,133 @@
+"""Mamba2 SSD chunked-scan Pallas TPU kernel.
+
+Grid: (batch, heads, n_chunks) — the chunk axis is sequential on TPU, so the
+inter-chunk SSM state [N, P] lives in VMEM scratch and is carried across
+chunks (the recurrence the pure-jnp ref implements with lax.scan).
+
+Per chunk (all fp32, MXU-shaped matmuls):
+  cum     = cumsum(dt·A)                                [L]
+  Lmat    = exp(segsum)  (tril)                         [L, L]
+  y_diag  = ((C Bᵀ) ⊙ Lmat) (dt·x)                      [L, P]
+  y_off   = (C ⊙ e^{cum}) · state                        [L, P]
+  state   = state·e^{cum_L} + (B ⊙ e^{cum_L − cum})ᵀ (dt·x)
+
+The GQA-style group sharing of B/C (G groups for H heads) is handled in the
+BlockSpec index map (group = h // (H/G)) — group tensors are never repeated
+in memory.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ssd_kernel(
+    x_ref,     # [L, P]   (dt-unweighted inputs)
+    dt_ref,    # [L, 1]   (post-softplus)
+    a_ref,     # [1, 1]   (negative decay rate for this head)
+    b_ref,     # [L, N]
+    c_ref,     # [L, N]
+    y_ref,     # [L, P]
+    st_ref,    # [P, N]   final state output (written at last chunk)
+    state_scr,  # VMEM [P, N] fp32 — carried SSM state
+    *,
+    n_chunks: int,
+    chunk: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[...].astype(jnp.float32)              # [L, P]
+    dt = dt_ref[...].astype(jnp.float32)            # [L, 1]
+    a = a_ref[0].astype(jnp.float32)   # block (None,1) squeezes to shape (1,)
+    b = b_ref[...].astype(jnp.float32)              # [L, N]
+    c = c_ref[...].astype(jnp.float32)              # [L, N]
+
+    dA = dt[:, 0] * a                               # [L]  (≤ 0)
+    cum = jnp.cumsum(dA)                            # [L]
+    xw = x * dt                                     # [L, P]
+
+    # intra-chunk quadratic branch
+    diff = cum[:, None] - cum[None, :]              # [L, L]
+    tril = (
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    )
+    lmat = jnp.where(tril, jnp.exp(diff), 0.0)
+    scores = jax.lax.dot_general(
+        c, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * lmat                                        # [L, L]
+    y = jax.lax.dot_general(
+        scores, xw, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                               # [L, P]
+
+    # inter-chunk contribution from the carried state
+    c_dec = c * jnp.exp(cum)[:, None]               # [L, N]
+    y += jax.lax.dot_general(
+        c_dec, state_scr[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                               # [L,N]·[P,N]ᵀ → [L, P]
+
+    # state update
+    decay_end = jnp.exp(cum[-1])
+    b_dec = b * jnp.exp(cum[-1] - cum)[:, None]     # [L, N]
+    state_scr[...] = state_scr[...] * decay_end + jax.lax.dot_general(
+        xw, b_dec, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                               # [P, N]
+
+    y_ref[...] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _fin():
+        st_ref[...] = state_scr[...].astype(st_ref.dtype)
+
+
+def ssd_scan_pallas(
+    x: jax.Array,     # [B, H, S, P]
+    dt: jax.Array,    # [B, H, S, 1]
+    a: jax.Array,     # [H, 1]
+    b: jax.Array,     # [B, G, S, N]
+    c: jax.Array,     # [B, G, S, N]
+    *,
+    chunk: int,
+    interpret: bool = False,
+):
+    bsz, h, s, p = x.shape
+    g, n = b.shape[1], b.shape[3]
+    assert s % chunk == 0
+    n_chunks = s // chunk
+    rep = h // g
+
+    kernel = functools.partial(_ssd_kernel, n_chunks=n_chunks, chunk=chunk)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=(bsz, h, n_chunks),
+        in_specs=[
+            pl.BlockSpec((None, None, chunk, p), lambda i, j, kk: (i, j, kk, 0)),
+            pl.BlockSpec((None, None, chunk, 1), lambda i, j, kk: (i, j, kk, 0)),
+            pl.BlockSpec((None, 1), lambda i, j, kk: (j, 0)),
+            pl.BlockSpec((None, None, chunk, n), lambda i, j, kk: (i, j // rep, kk, 0)),
+            pl.BlockSpec((None, None, chunk, n), lambda i, j, kk: (i, j // rep, kk, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, chunk, p), lambda i, j, kk: (i, j, kk, 0)),
+            pl.BlockSpec((None, None, p, n), lambda i, j, kk: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, h, s, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, b, c)
+    return y, st

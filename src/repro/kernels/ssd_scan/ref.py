@@ -1,0 +1,12 @@
+"""Oracle: the pure-jnp chunked SSD from the model (models/ssm.ssd_chunked)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.models.ssm import ssd_chunked
+
+
+def ssd_ref(x, dt, a, b, c, chunk):
+    """x:[B,S,H,P] dt:[B,S,H] a:[H] b,c:[B,S,G,N] → (y [B,S,H,P], state [B,H,P,N])."""
+    return ssd_chunked(x, dt, a, b, c, chunk)

@@ -1,0 +1,24 @@
+"""Production mesh construction (a FUNCTION — importing this module never
+touches jax device state; jax locks the device count on first init)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: Optional[int] = None, *, multi_pod: bool = False):
+    """Small mesh over however many (host) devices exist — used by tests."""
+    n = n_devices or len(jax.devices())
+    if multi_pod and n % 2 == 0:
+        return jax.make_mesh((2, 1, n // 2), ("pod", "data", "model"))
+    if n >= 4:
+        return jax.make_mesh((2, n // 2), ("data", "model"))
+    return jax.make_mesh((1, n), ("data", "model"))

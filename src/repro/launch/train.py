@@ -1,0 +1,64 @@
+"""Training launcher CLI.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+        --steps 200 --smoke            # reduced config (CPU-runnable)
+
+On a real TPU fleet the same entry point runs the full config; the dry-run
+(launch/dryrun.py) is the no-hardware proof of the full-size program.
+"""
+
+from __future__ import annotations
+
+import argparse
+from dataclasses import replace
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig
+from repro.train.loop import TrainConfig, train
+from repro.train.optimizer import AdamWConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_train")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--accum-steps", type=int, default=1)
+    ap.add_argument("--quant8-opt", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config of the same family (CPU-runnable)")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    data_cfg = DataConfig(
+        vocab_size=cfg.vocab_size,
+        seq_len=args.seq_len,
+        global_batch=args.global_batch,
+    )
+    train_cfg = TrainConfig(
+        steps=args.steps,
+        checkpoint_every=args.checkpoint_every,
+        checkpoint_dir=args.checkpoint_dir,
+        accum_steps=args.accum_steps,
+        quant8_opt=args.quant8_opt,
+        metrics_path=f"{args.checkpoint_dir}/metrics.jsonl",
+    )
+    import os
+
+    os.makedirs(args.checkpoint_dir, exist_ok=True)
+    out = train(cfg, data_cfg, train_cfg, AdamWConfig(lr=args.lr, total_steps=args.steps))
+    print(
+        f"[train] {args.arch}: loss {out['first_loss']:.3f} -> "
+        f"{out['final_loss']:.3f} over {out['steps_run']} steps "
+        f"({out['wall_s']:.0f}s)"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,330 @@
+"""Shared neural-net layers for the model zoo (pure JAX, no flax).
+
+Parameters are nested dicts of jnp arrays.  Every layer takes the param
+sub-tree as its first argument.  Attention supports GQA, causal and
+sliding-window masking, soft-capping (gemma2), qk-norm (qwen3), RoPE and
+M-RoPE (qwen2-vl), and three implementations:
+
+* ``naive``   — materializes the [S, S] score matrix (oracle / small tests),
+* ``chunked`` — lax.scan over KV blocks with online softmax (flash-attention
+  algorithm in pure jnp; memory-safe at 32k+ and what the dry-run lowers),
+* ``pallas``  — the TPU kernel in repro.kernels (validated in interpret mode).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel.context import shard_hint
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), dtype=jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def rmsnorm_init(d: int) -> jax.Array:
+    return jnp.zeros((d,), dtype=jnp.float32)  # stored as (1 + w) offset form
+
+
+# --------------------------------------------------------------------------
+# RoPE / M-RoPE
+# --------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, D]; positions: [B, S] (int)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                                  # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs     # [B, S, D/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array,
+    positions: jax.Array,        # [3, B, S] — (t, h, w) position streams
+    theta: float,
+    sections: Tuple[int, int, int],
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: the D/2 frequency slots are split into
+    (t, h, w) sections, each rotated by its own position stream."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                                  # [D/2]
+    assert sum(sections) == d // 2, (sections, d)
+    # build per-slot positions: [B, S, D/2]
+    parts = []
+    start = 0
+    for i, sec in enumerate(sections):
+        pos_i = positions[i][..., None].astype(jnp.float32)       # [B, S, 1]
+        parts.append(jnp.broadcast_to(pos_i, pos_i.shape[:-1] + (sec,)))
+        start += sec
+    pos_slots = jnp.concatenate(parts, axis=-1)                   # [B, S, D/2]
+    angles = pos_slots * freqs
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+
+def attention_params(key, cfg: ModelConfig, dtype) -> Params:
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * hd, dtype),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd)
+        p["k_norm"] = rmsnorm_init(hd)
+    return p
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def _attn_mask(
+    q_pos: jax.Array,          # [Sq] absolute positions of queries
+    k_pos: jax.Array,          # [Sk]
+    causal: bool,
+    window: Optional[int],
+) -> jax.Array:
+    """True where attention is allowed."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= k_pos[None, :] > (q_pos[:, None] - window)
+    return m
+
+
+def _naive_attention(q, k, v, q_pos, k_pos, *, causal, window, cap, scale):
+    """q: [B,Sq,G,R,D] (GQA-grouped), k/v: [B,Sk,G,D] — no KV repeat is ever
+    materialized (2× memory at 32k-decode otherwise)."""
+    scores = jnp.einsum(
+        "bqgrd,bkgd->bgrqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    scores = softcap(scores, cap)
+    mask = _attn_mask(q_pos, k_pos, causal, window)
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", w.astype(v.dtype), v)
+    return out
+
+
+def _chunked_attention(q, k, v, q_pos, k_pos, *, causal, window, cap, scale, chunk):
+    """Online-softmax attention, scanning over KV chunks (flash algorithm).
+
+    q: [B,Sq,G,R,D] (GQA-grouped), k/v: [B,Sk,G,D]."""
+    b, sq, g, r, d = q.shape
+    sk = k.shape[1]
+    nchunks = -(-sk // chunk)
+    pad = nchunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=jnp.iinfo(jnp.int32).max)
+    kc = k.reshape(b, nchunks, chunk, g, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nchunks, chunk, g, d).transpose(1, 0, 2, 3, 4)
+    pc = k_pos.reshape(nchunks, chunk)
+
+    qf = q.astype(jnp.float32)
+
+    def body(carry, xs):
+        m_prev, l_prev, acc = carry
+        kb, vb, pb = xs                                           # [B,C,G,D], [C]
+        s = jnp.einsum("bqgrd,bkgd->bgrqk", qf, kb.astype(jnp.float32)) * scale
+        s = softcap(s, cap)
+        mask = _attn_mask(q_pos, pb, causal, window)
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        pexp = jnp.exp(s - m_new[..., None])
+        l_new = l_prev * alpha + pexp.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bgrqk,bkgd->bgrqd", pexp, vb.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, g, r, sq), -jnp.inf, dtype=jnp.float32)
+    l0 = jnp.zeros((b, g, r, sq), dtype=jnp.float32)
+    a0 = jnp.zeros((b, g, r, sq, d), dtype=jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(l_f[..., None], 1e-30)
+    # [B,G,R,Sq,D] -> [B,Sq,G,R,D]
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+
+
+def multihead_attention(
+    p: Params,
+    x: jax.Array,                     # [B, Sq, D_model]
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,             # [B, Sq] (or [3, B, Sq] for M-RoPE)
+    kv_cache: Optional[Dict[str, jax.Array]] = None,   # {"k","v": [B,Smax,KV,hd]}
+    cache_pos: Optional[jax.Array] = None,             # scalar: #valid cache entries
+    layer_window: Optional[int] = None,
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,  # enc-dec cross attn
+    causal: Optional[bool] = None,    # None → causal for self, full for cross
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    hd = cfg.resolved_head_dim
+    b, sq, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, sq, cfg.n_heads, hd)
+
+    if cross_kv is None:
+        k = (x @ p["wk"]).reshape(b, sq, cfg.n_kv_heads, hd)
+        v = (x @ p["wv"]).reshape(b, sq, cfg.n_kv_heads, hd)
+    else:
+        k, v = cross_kv
+
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        if cross_kv is None:
+            k = rmsnorm(k, p["k_norm"])
+
+    # RoPE (self-attention only; seamless cross-attn has no rope on kv)
+    if cross_kv is None:
+        if cfg.mrope_sections is not None:
+            q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+            q_pos1d = positions[0][0]        # [Sq] — temporal stream for masking
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            q_pos1d = positions[0]
+    else:
+        q_pos1d = positions[0] if positions.ndim == 2 else positions[0][0]
+
+    q = shard_hint(q, "batch", None, "heads", None)
+
+    new_cache = None
+    if kv_cache is not None and cross_kv is None:
+        # decode / incremental prefill: write new kv at cache_pos
+        kcache, vcache = kv_cache["k"], kv_cache["v"]
+        kcache = jax.lax.dynamic_update_slice_in_dim(kcache, k.astype(kcache.dtype), cache_pos, axis=1)
+        vcache = jax.lax.dynamic_update_slice_in_dim(vcache, v.astype(vcache.dtype), cache_pos, axis=1)
+        new_cache = {"k": kcache, "v": vcache}
+        k, v = kcache, vcache
+        k_pos1d = jnp.arange(k.shape[1])
+        # the causal test against q_pos also masks unwritten cache slots
+        causal = True
+    else:
+        k_pos1d = q_pos1d if cross_kv is None else jnp.arange(k.shape[1])
+        if causal is None:
+            causal = cross_kv is None
+
+    g = k.shape[2]
+    n_rep = cfg.n_heads // g
+    qg = q.reshape(b, sq, g, n_rep, hd)   # GQA grouping — KV is never repeated
+
+    scale = cfg.attn_logit_scale if cfg.attn_logit_scale is not None else 1.0 / math.sqrt(hd)
+    window = layer_window
+    impl = cfg.attention_impl
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        out = fa_ops.flash_attention(
+            q, k, v, q_pos1d, k_pos1d, causal=causal, window=window,
+            softcap=cfg.attn_softcap, scale=scale,
+        )
+    elif impl == "chunked" and k.shape[1] > cfg.attn_chunk and sq > 1:
+        out = _chunked_attention(
+            qg, k, v, q_pos1d, k_pos1d,
+            causal=causal, window=window, cap=cfg.attn_softcap, scale=scale,
+            chunk=cfg.attn_chunk,
+        ).reshape(b, sq, cfg.n_heads, hd)
+    else:
+        out = _naive_attention(
+            qg, k, v, q_pos1d, k_pos1d,
+            causal=causal, window=window, cap=cfg.attn_softcap, scale=scale,
+        ).astype(x.dtype).reshape(b, sq, cfg.n_heads, hd)
+
+    out = out.reshape(b, sq, cfg.n_heads * hd)
+    out = out @ p["wo"]
+    out = shard_hint(out, "batch", None, "embed")
+    return out, new_cache
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+
+
+def mlp_params(key, d_model: int, d_ff: int, activation: str, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], d_model, d_ff, dtype),
+        "w_up": dense_init(ks[1], d_model, d_ff, dtype),
+        "w_down": dense_init(ks[2], d_ff, d_model, dtype),
+    }
+
+
+def mlp(p: Params, x: jax.Array, activation: str) -> jax.Array:
+    gate = x @ p["w_gate"]
+    up = x @ p["w_up"]
+    gate = shard_hint(gate, "batch", None, "ff")
+    up = shard_hint(up, "batch", None, "ff")
+    if activation == "silu":
+        h = jax.nn.silu(gate) * up
+    elif activation == "geglu":
+        h = jax.nn.gelu(gate, approximate=True) * up
+    elif activation == "gelu":
+        h = jax.nn.gelu(gate, approximate=True) * up
+    else:
+        raise ValueError(activation)
+    out = h @ p["w_down"]
+    return shard_hint(out, "batch", None, "embed")

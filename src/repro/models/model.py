@@ -1,0 +1,108 @@
+"""Model façade: family dispatch + loss + parameter accounting.
+
+``build_model(cfg)`` returns a ``Model`` with uniform entry points so the
+launcher, trainer, serving engine and dry-run never branch on family.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import encdec, transformer
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    train_forward: Callable[..., Tuple[jax.Array, jax.Array]]
+    prefill: Callable[..., Tuple[jax.Array, Any]]
+    decode_step: Callable[..., Tuple[jax.Array, Any]]
+    init_cache: Callable[..., Any]
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "encdec":
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec.init_params(key, cfg),
+            train_forward=lambda p, b: encdec.train_forward(p, b, cfg),
+            prefill=lambda p, b, max_len=None: encdec.prefill(p, b, cfg, max_len),
+            decode_step=lambda p, t, c, pos: encdec.decode_step(p, t, c, pos, cfg),
+            # cross cache length = encoder frame count (same seq grid here)
+            init_cache=lambda b, s: {
+                "self": encdec.init_self_cache(cfg, b, s),
+                "cross": encdec.init_self_cache(cfg, b, s),
+            },
+        )
+    return Model(
+        cfg=cfg,
+        init=lambda key: transformer.init_params(key, cfg),
+        train_forward=lambda p, b: transformer.train_forward(p, b, cfg),
+        prefill=lambda p, b, max_len=None: transformer.prefill(p, b, cfg, max_len),
+        decode_step=lambda p, t, c, pos: transformer.decode_step(p, t, c, pos, cfg),
+        init_cache=lambda b, s: transformer.init_cache(cfg, b, s),
+    )
+
+
+# --------------------------------------------------------------------------
+# loss
+# --------------------------------------------------------------------------
+
+
+def cross_entropy_loss(
+    logits: jax.Array,         # [B, S, V]
+    labels: jax.Array,         # [B, S] int32; −1 = ignore
+    *,
+    aux_loss: jax.Array | float = 0.0,
+    aux_weight: float = 0.01,
+    z_loss: float = 1e-4,
+) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    nll = lse - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    # z-loss stabilizes the softmax normalizer at scale (PaLM-style)
+    loss = loss + z_loss * ((lse * mask) ** 2).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss + aux_weight * aux_loss
+
+
+# --------------------------------------------------------------------------
+# parameter accounting (used by configs' self-checks and the roofline)
+# --------------------------------------------------------------------------
+
+
+def param_count(params) -> int:
+    return int(
+        sum(x.size for x in jax.tree.leaves(params) if hasattr(x, "size"))
+    )
+
+
+def param_count_shape(cfg: ModelConfig) -> int:
+    """Parameter count from shapes only (eval_shape — no allocation)."""
+    import math as _math
+
+    model = build_model(cfg)
+    tree = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return sum(_math.prod(x.shape) for x in jax.tree.leaves(tree))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """MoE: parameters touched per token (for MODEL_FLOPS = 6·N_active·D)."""
+    total = param_count_shape(cfg)
+    if not cfg.n_experts:
+        return total
+    e_pad = cfg.n_experts_padded or cfg.n_experts
+    per_expert = 3 * cfg.d_model * cfg.moe_d_ff
+    routed_total = e_pad * per_expert * cfg.n_layers
+    routed_active = cfg.top_k * per_expert * cfg.n_layers
+    return total - routed_total + routed_active

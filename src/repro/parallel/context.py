@@ -1,0 +1,101 @@
+"""Logical-axis sharding context (a minimal flax-style axis-rules mechanism).
+
+Models annotate activations with *logical* axis names; the launcher installs
+a mapping from logical names to mesh axis names.  Outside any context (unit
+tests, single-device smoke runs) every hint is a no-op, so model code never
+depends on a mesh being present.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+_state = threading.local()
+
+
+def _current() -> Optional["ParallelContext"]:
+    return getattr(_state, "ctx", None)
+
+
+class ParallelContext:
+    """Holds the mesh + logical→mesh axis rules + feature flags."""
+
+    def __init__(
+        self,
+        mesh: Optional[Mesh],
+        rules: Optional[Dict[str, MeshAxes]] = None,
+        *,
+        ep_axes: Tuple[str, ...] = (),
+        dp_axes: Tuple[str, ...] = (),
+        tp_axis: Optional[str] = None,
+    ):
+        self.mesh = mesh
+        self.rules = dict(rules or {})
+        self.ep_axes = ep_axes
+        self.dp_axes = dp_axes
+        self.tp_axis = tp_axis
+
+    def spec_for(self, logical: Sequence[Optional[str]]) -> P:
+        axes = []
+        for name in logical:
+            axes.append(self.rules.get(name) if name is not None else None)
+        return P(*axes)
+
+    # mesh axis sizes the MoE layer needs for static shapes
+    def axis_size(self, names: Union[str, Tuple[str, ...]]) -> int:
+        if self.mesh is None:
+            return 1
+        if isinstance(names, str):
+            names = (names,)
+        size = 1
+        for n in names:
+            size *= self.mesh.shape[n]
+        return size
+
+
+@contextlib.contextmanager
+def parallel_context(ctx: ParallelContext):
+    prev = _current()
+    _state.ctx = ctx
+    try:
+        yield ctx
+    finally:
+        _state.ctx = prev
+
+
+def current_context() -> Optional[ParallelContext]:
+    return _current()
+
+
+def shard_hint(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axis names; no-op w/o a context."""
+    ctx = _current()
+    if ctx is None or ctx.mesh is None:
+        return x
+    spec = ctx.spec_for(logical)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+# Default logical-axis rule set used by the launcher: batch → data parallel,
+# heads/ff/vocab/experts → tensor/expert parallel.
+def default_rules(multi_pod: bool) -> Dict[str, MeshAxes]:
+    dp: MeshAxes = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "batch": dp,
+        "heads": "model",
+        "kv_heads": "model",
+        "ff": "model",
+        "vocab": "model",
+        "embed": None,
+        "seq": None,
+        "kv_seq": "data",      # long-context decode: KV cache sharded over data
+        "experts": dp,          # EP over the data-parallel axes
+        "expert_ff": "model",
+    }

@@ -1,0 +1,180 @@
+"""Serving engine: continuous batching over the Moirai stage executor.
+
+* fixed decode slots (classic continuous batching: a finished sequence frees
+  its slot for the next queued request; prefill happens into the slot),
+* Moirai placement computed once at startup from the layer-level OpGraph and
+  the cluster spec (and re-computed by ``on_device_failure`` — elastic),
+* per-stage latency tracking feeds the straggler monitor: a stage whose p95
+  drifts beyond ``straggler_factor``× the median of the others is flagged
+  and (policy) triggers re-planning with that device derated.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.costmodel import CostModel
+from repro.core.devices import ClusterSpec
+from repro.core.modelgraph import transformer_graph
+from repro.core.placement import PlanConfig, plan, replan
+from .stage_executor import StageExecutor, stages_from_placement
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        cluster: ClusterSpec,
+        *,
+        devices: Optional[List[Any]] = None,
+        slots: int = 4,
+        max_len: int = 256,
+        plan_cfg: Optional[PlanConfig] = None,
+        eos_id: int = 0,
+        straggler_factor: float = 4.0,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.cluster = cluster
+        self.devices = devices or jax.devices()
+        self.slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.straggler_factor = straggler_factor
+        self.plan_cfg = plan_cfg or PlanConfig(method="moirai", time_limit=20.0)
+
+        self.graph = transformer_graph(cfg, seq_len=max_len, granularity="block")
+        self.placement_result = plan(self.graph, cluster, self.plan_cfg)
+        self._build_executor(self.placement_result.placement)
+
+        self.queue: List[Request] = []
+        self.active: List[Optional[Request]] = [None] * slots
+        self.slot_pos = np.zeros(slots, dtype=np.int64)
+        self.caches = None
+        self.failed_devices: List[int] = []
+
+    # ------------------------------------------------------------------
+    def _build_executor(self, placement: Dict[int, int]):
+        stages = stages_from_placement(
+            self.graph, placement, self.devices, self.cfg.n_layers
+        )
+        self.executor = StageExecutor(self.cfg, self.params, stages)
+        self.caches = None  # caches are invalid after a topology change
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.slots):
+            if self.active[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                self.active[slot] = req
+                # prefill this slot (batch-1 prefill into the slot's cache row)
+                toks = jnp.asarray([req.prompt], jnp.int32)
+                logits, slot_caches = self._prefill_slot(toks)
+                nxt = int(jnp.argmax(logits[0, -1]))
+                req.out_tokens.append(nxt)
+                self._write_slot_cache(slot, slot_caches)
+                self.slot_pos[slot] = len(req.prompt)
+
+    def _prefill_slot(self, toks):
+        caches = self.executor.init_caches(1, self.max_len)
+        logits, new_caches = self.executor.forward(toks, caches, cache_pos=0)
+        return logits, new_caches
+
+    def _write_slot_cache(self, slot: int, slot_caches):
+        if self.caches is None:
+            self.caches = self.executor.init_caches(self.slots, self.max_len)
+        for si, st_caches in enumerate(slot_caches):
+            for li, layer_cache in enumerate(st_caches):
+                for key in ("k", "v"):
+                    self.caches[si][li][key] = (
+                        self.caches[si][li][key].at[slot].set(layer_cache[key][0])
+                    )
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One engine iteration: admit → batched decode → retire. Returns
+        number of active sequences."""
+        self._admit()
+        idx = [i for i, r in enumerate(self.active) if r is not None]
+        if not idx:
+            return 0
+        # batched single-token decode over ALL slots (inactive slots decode
+        # garbage into their own rows — masked at retirement)
+        last = [
+            (self.active[i].out_tokens[-1] if self.active[i] else 0)
+            for i in range(self.slots)
+        ]
+        toks = jnp.asarray(last, jnp.int32)[:, None]
+        pos = int(max(self.slot_pos[i] for i in idx))
+        logits, self.caches = self.executor.forward(toks, self.caches, cache_pos=pos)
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        for i in idx:
+            req = self.active[i]
+            req.out_tokens.append(int(nxt[i]))
+            self.slot_pos[i] += 1
+            if (
+                int(nxt[i]) == self.eos_id
+                or len(req.out_tokens) >= req.max_new_tokens
+                or self.slot_pos[i] >= self.max_len - 1
+            ):
+                req.done = True
+                self.active[i] = None
+        return len(idx)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
+        finished: List[Request] = []
+        seen = set()
+        for _ in range(max_steps):
+            n = self.step()
+            if n == 0 and not self.queue:
+                break
+        return finished
+
+    # ------------------------------------------------------------------
+    # fault tolerance / elasticity
+    # ------------------------------------------------------------------
+    def on_device_failure(self, device_idx: int):
+        """Re-plan on the surviving devices and rebuild stages (weights
+        migrate; in-flight sequences must be re-prefilled by the caller)."""
+        self.failed_devices.append(device_idx)
+        res = replan(self.graph, self.cluster, device_idx, self.plan_cfg)
+        self.placement_result = res
+        surviving = [d for i, d in enumerate(self.devices) if i != device_idx]
+        self.devices = surviving
+        # replan returns original-cluster indices; compact to surviving list
+        alive = sorted({k for k in res.placement.values()})
+        remap = {k: i for i, k in enumerate(alive)}
+        placement = {n: remap[k] for n, k in res.placement.items()}
+        self._build_executor(placement)
+
+    def straggler_report(self) -> Dict[str, Any]:
+        stats = self.executor.stage_latency_stats()
+        p95s = [s["p95"] for s in stats if s["n"] > 0]
+        if not p95s:
+            return {"stages": stats, "stragglers": []}
+        med = float(np.median(p95s))
+        stragglers = [
+            i for i, s in enumerate(stats)
+            if s["n"] > 3 and med > 0 and s["p95"] > self.straggler_factor * med
+        ]
+        return {"stages": stats, "median_p95": med, "stragglers": stragglers}

@@ -1,0 +1,203 @@
+"""Moirai-driven inter-operator model-parallel executor (the paper's runtime).
+
+Given a layer-granularity OpGraph placement (node → device), consecutive
+co-located blocks become *stages*; each stage is a jitted function pinned to
+its jax.Device, and activations move between stages with explicit
+``jax.device_put`` — exactly the PyTorch runtime the paper deploys, in JAX.
+Within a stage, tensor parallelism is free to apply (mesh slices); here each
+Moirai device maps to one jax.Device.
+
+Supports dense/MoE decoder-only models at ``scan_layers=False`` (per-layer
+param lists — the serving configuration).  Prefill and decode keep each
+stage's KV cache resident on that stage's device.
+
+``replace_device`` + ``from_replan`` give elastic recovery: on device
+failure the engine re-plans with core.placement.replan and rebuilds stages —
+weights migrate, caches are re-prefilled by the engine.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.graph import OpGraph
+from repro.models import transformer
+from repro.models.layers import rmsnorm, softcap
+
+
+@dataclass
+class Stage:
+    device: Any                      # jax.Device
+    layer_ids: List[int]             # model layer indices (contiguous)
+    first: bool = False              # owns embedding
+    last: bool = False               # owns final norm + lm head
+
+
+def stages_from_placement(
+    graph: OpGraph,
+    placement: Dict[int, int],
+    devices: Sequence[Any],
+    n_layers: int,
+) -> List[Stage]:
+    """Layer-graph nodes (embed, blocks…, lm_head) → contiguous stages.
+
+    The layer graph is a chain: topological order maps node k to model layer
+    k−1 (node 0 = embed, last = lm_head).  Moirai may interleave devices
+    arbitrarily; the executor honors the order, creating a new stage at every
+    device change."""
+    order = graph.topo_order()
+    assert len(order) == n_layers + 2, (len(order), n_layers)
+    stages: List[Stage] = []
+    for pos, nid in enumerate(order):
+        dev = devices[placement[nid] % len(devices)]
+        if pos == 0:
+            stages.append(Stage(device=dev, layer_ids=[], first=True))
+            continue
+        layer_idx = pos - 1
+        if pos == len(order) - 1:
+            if stages[-1].device is not dev:
+                stages.append(Stage(device=dev, layer_ids=[]))
+            stages[-1].last = True
+            continue
+        if stages[-1].device is dev:
+            stages[-1].layer_ids.append(layer_idx)
+        else:
+            stages.append(Stage(device=dev, layer_ids=[layer_idx]))
+    return stages
+
+
+class StageExecutor:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Dict[str, Any],
+        stages: List[Stage],
+    ):
+        assert not cfg.scan_layers, "serving executor expects per-layer params"
+        self.cfg = cfg
+        self.stages = stages
+        self._windows = transformer._layer_windows(cfg)
+        self._place_params(params)
+        self._stage_times: List[List[float]] = [[] for _ in stages]
+        self._fns: Dict[int, Callable] = {}
+
+    # ------------------------------------------------------------------
+    def _place_params(self, params):
+        self.stage_params: List[Dict[str, Any]] = []
+        for st in self.stages:
+            sp: Dict[str, Any] = {
+                "layers": [
+                    jax.device_put(params["layers"][i], st.device)
+                    for i in st.layer_ids
+                ]
+            }
+            if st.first:
+                sp["embed"] = jax.device_put(params["embed"], st.device)
+            if st.last:
+                sp["ln_final"] = jax.device_put(params["ln_final"], st.device)
+                if not self.cfg.tie_embeddings:
+                    sp["lm_head"] = jax.device_put(params["lm_head"], st.device)
+                elif not st.first:
+                    sp["embed"] = jax.device_put(params["embed"], st.device)
+            self.stage_params.append(sp)
+
+    # ------------------------------------------------------------------
+    def _stage_fn(self, si: int, decode: bool):
+        cfg = self.cfg
+        st = self.stages[si]
+        windows = [int(self._windows[i]) for i in st.layer_ids]
+
+        def run(sp, x, positions, caches, cache_pos):
+            new_caches = []
+            if st.first:
+                tokens = x
+                x = jnp.take(sp["embed"], tokens, axis=0)
+                if cfg.scale_embed:
+                    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+            for j, layer_p in enumerate(sp["layers"]):
+                cache_j = caches[j] if caches is not None else None
+                x, nc, _ = transformer.block_apply(
+                    layer_p, x, cfg,
+                    positions=positions,
+                    window=jnp.asarray(windows[j], jnp.int32),
+                    kv_cache=cache_j,
+                    cache_pos=cache_pos,
+                )
+                new_caches.append(nc)
+            if st.last:
+                x = rmsnorm(x, sp["ln_final"])
+                head = sp["embed"].T if cfg.tie_embeddings else sp["lm_head"]
+                x = softcap(x @ head, cfg.logit_softcap)
+            return x, new_caches
+
+        # computation follows its (committed) inputs' device placement
+        return jax.jit(run)
+
+    # ------------------------------------------------------------------
+    def init_caches(self, batch: int, max_len: int):
+        hd = self.cfg.resolved_head_dim
+        dt = jnp.dtype(self.cfg.dtype)
+        caches = []
+        for st in self.stages:
+            caches.append([
+                {
+                    "k": jax.device_put(
+                        jnp.zeros((batch, max_len, self.cfg.n_kv_heads, hd), dt),
+                        st.device,
+                    ),
+                    "v": jax.device_put(
+                        jnp.zeros((batch, max_len, self.cfg.n_kv_heads, hd), dt),
+                        st.device,
+                    ),
+                }
+                for _ in st.layer_ids
+            ])
+        return caches
+
+    def forward(
+        self,
+        tokens: jax.Array,            # [B, S] (prefill) or [B, 1] (decode)
+        caches=None,
+        cache_pos: Optional[int] = None,
+    ):
+        b, s = tokens.shape
+        pos0 = 0 if cache_pos is None else int(cache_pos)
+        positions = jnp.broadcast_to(
+            jnp.arange(pos0, pos0 + s, dtype=jnp.int32)[None], (b, s)
+        )
+        cp = jnp.asarray(pos0, jnp.int32)
+        x = tokens
+        new_caches = []
+        for si, st in enumerate(self.stages):
+            t0 = time.perf_counter()
+            x = jax.device_put(x, st.device)          # inter-stage data flow
+            fn = self._fns.setdefault(si, self._stage_fn(si, s == 1))
+            st_caches = caches[si] if caches is not None else None
+            x, nc = fn(self.stage_params[si], x, positions, st_caches, cp)
+            x.block_until_ready()
+            self._stage_times[si].append(time.perf_counter() - t0)
+            new_caches.append(nc)
+        return x, new_caches
+
+    # stage latency stats (straggler detection feed)
+    def stage_latency_stats(self) -> List[Dict[str, float]]:
+        import numpy as np
+
+        out = []
+        for times in self._stage_times:
+            if times:
+                arr = np.asarray(times)
+                out.append({
+                    "mean": float(arr.mean()),
+                    "p95": float(np.percentile(arr, 95)),
+                    "n": len(times),
+                })
+            else:
+                out.append({"mean": 0.0, "p95": 0.0, "n": 0})
+        return out

@@ -1,0 +1,167 @@
+"""Fault-tolerant checkpointing: atomic, content-verified, async.
+
+Layout:  <dir>/step_<n>/
+             arrays.npz           (flat {path: array})
+             manifest.json        (step, tree structure, sizes, checksums)
+             COMMITTED            (sentinel — written last, after fsync)
+
+Crash-safety: everything is staged in ``step_<n>.tmp`` and renamed into
+place; a checkpoint without the COMMITTED sentinel is ignored by
+``latest_step`` and garbage-collected.  ``AsyncCheckpointer`` snapshots
+device arrays to host and writes on a background thread so the step loop
+never blocks on disk.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten(template, flat: Dict[str, np.ndarray]):
+    paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    treedef = jax.tree_util.tree_structure(template)
+    leaves = []
+    for path, leaf in paths:
+        key = _SEP.join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        arr = flat[key]
+        if hasattr(leaf, "dtype") and arr.dtype != leaf.dtype:
+            arr = arr.astype(leaf.dtype)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_checkpoint(directory: str | Path, step: int, tree: Any) -> Path:
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    final = directory / f"step_{step:08d}"
+    tmp = directory / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    flat = _flatten(tree)
+    np.savez(tmp / "arrays.npz", **flat)
+    manifest = {
+        "step": step,
+        "arrays": {
+            k: {
+                "shape": list(v.shape),
+                "dtype": str(v.dtype),
+                "crc32": zlib.crc32(np.ascontiguousarray(v).tobytes()) & 0xFFFFFFFF,
+            }
+            for k, v in flat.items()
+        },
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    with open(tmp / "COMMITTED", "w") as f:
+        f.write("ok")
+        f.flush()
+        os.fsync(f.fileno())
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    return final
+
+
+def latest_step(directory: str | Path) -> Optional[int]:
+    directory = Path(directory)
+    if not directory.exists():
+        return None
+    steps = []
+    for d in directory.iterdir():
+        if d.name.startswith("step_") and not d.name.endswith(".tmp"):
+            if (d / "COMMITTED").exists():
+                steps.append(int(d.name.split("_")[1]))
+            # uncommitted (crashed mid-write): ignore
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(
+    directory: str | Path, template: Any, step: Optional[int] = None,
+    *, verify: bool = True,
+) -> Tuple[int, Any]:
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {directory}")
+    d = directory / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    with np.load(d / "arrays.npz") as z:
+        flat = {k: z[k] for k in z.files}
+    if verify:
+        for k, meta in manifest["arrays"].items():
+            crc = zlib.crc32(np.ascontiguousarray(flat[k]).tobytes()) & 0xFFFFFFFF
+            if crc != meta["crc32"]:
+                raise IOError(f"checkpoint corruption: crc mismatch for {k!r}")
+    return step, _unflatten(template, flat)
+
+
+def gc_checkpoints(directory: str | Path, keep: int = 3) -> None:
+    directory = Path(directory)
+    if not directory.exists():
+        return
+    committed = sorted(
+        d for d in directory.iterdir()
+        if d.name.startswith("step_") and (d / "COMMITTED").exists()
+    )
+    for d in committed[:-keep]:
+        shutil.rmtree(d, ignore_errors=True)
+    for d in directory.iterdir():  # crashed partial writes
+        if d.name.endswith(".tmp"):
+            shutil.rmtree(d, ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Snapshot-to-host + background write; join() before process exit."""
+
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.directory = Path(directory)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree: Any) -> None:
+        self.wait()  # one in flight at a time
+        host_tree = jax.tree.map(np.asarray, tree)  # snapshot NOW
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_tree)
+                gc_checkpoints(self.directory, self.keep)
+            except BaseException as e:  # noqa: BLE001
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

@@ -1,0 +1,129 @@
+"""Fault-tolerant training loop.
+
+Features exercised by tests/test_train_loop.py and examples/train_demo.py:
+  * resume-from-latest checkpoint with exact data-stream continuation
+    (the pipeline is deterministic per (step, host), so no iterator state),
+  * periodic async checkpoints off the critical path,
+  * simulated-preemption recovery (``max_steps_before_crash`` in tests),
+  * NaN-loss circuit breaker (skip update + counter, abort after K in a row),
+  * per-step metrics log (JSONL) for the benchmark harness.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, make_pipeline
+from repro.models.model import Model, build_model
+from .checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
+from .optimizer import AdamWConfig, init_opt_state
+from .step import make_train_step
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 200
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep_checkpoints: int = 3
+    log_every: int = 10
+    accum_steps: int = 1
+    quant8_opt: bool = False
+    seed: int = 0
+    max_consecutive_nan: int = 5
+    metrics_path: Optional[str] = None
+
+
+def train(
+    cfg: ModelConfig,
+    data_cfg: DataConfig,
+    train_cfg: TrainConfig,
+    opt_cfg: Optional[AdamWConfig] = None,
+    *,
+    make_batch: Optional[Callable[[Dict[str, np.ndarray]], Dict[str, Any]]] = None,
+) -> Dict[str, Any]:
+    """Train (or resume) and return summary metrics."""
+    opt_cfg = opt_cfg or AdamWConfig(total_steps=train_cfg.steps)
+    model = build_model(cfg)
+    step_fn = jax.jit(
+        make_train_step(model, opt_cfg, accum_steps=train_cfg.accum_steps),
+        donate_argnums=(0, 1),
+    )
+
+    key = jax.random.PRNGKey(train_cfg.seed)
+    params = model.init(key)
+    opt_state = init_opt_state(params, quant8=train_cfg.quant8_opt)
+
+    # ---- resume ------------------------------------------------------------
+    start_step = 0
+    ckpt_dir = Path(train_cfg.checkpoint_dir)
+    if latest_step(ckpt_dir) is not None:
+        start_step, restored = restore_checkpoint(
+            ckpt_dir, {"params": params, "opt": opt_state}
+        )
+        params, opt_state = restored["params"], restored["opt"]
+        print(f"[train] resumed from step {start_step}")
+
+    pipeline = make_pipeline(data_cfg, start_step=start_step)
+    ckpt = AsyncCheckpointer(ckpt_dir, keep=train_cfg.keep_checkpoints)
+    metrics_f = open(train_cfg.metrics_path, "a") if train_cfg.metrics_path else None
+
+    losses = []
+    nan_streak = 0
+    t_start = time.perf_counter()
+    try:
+        for step in range(start_step, train_cfg.steps):
+            batch = next(pipeline)
+            if make_batch is not None:
+                batch = make_batch(batch)
+            new_params, new_opt, m = step_fn(params, opt_state, batch)
+            loss = float(m["loss"])
+            if math.isnan(loss) or math.isinf(loss):
+                # NaN circuit breaker: drop the update, keep old state
+                nan_streak += 1
+                if nan_streak >= train_cfg.max_consecutive_nan:
+                    raise FloatingPointError(
+                        f"{nan_streak} consecutive non-finite losses"
+                    )
+                # donated buffers are gone; re-init from last checkpoint
+                ls = latest_step(ckpt_dir)
+                if ls is not None:
+                    _, restored = restore_checkpoint(
+                        ckpt_dir, {"params": params, "opt": opt_state}
+                    )
+                    params, opt_state = restored["params"], restored["opt"]
+                continue
+            nan_streak = 0
+            params, opt_state = new_params, new_opt
+            losses.append(loss)
+            if metrics_f and (step % train_cfg.log_every == 0):
+                metrics_f.write(json.dumps({"step": step, "loss": loss}) + "\n")
+                metrics_f.flush()
+            if (step + 1) % train_cfg.checkpoint_every == 0:
+                ckpt.save(step + 1, {"params": params, "opt": opt_state})
+        ckpt.save(train_cfg.steps, {"params": params, "opt": opt_state})
+        ckpt.wait()
+    finally:
+        pipeline.stop()
+        if metrics_f:
+            metrics_f.close()
+
+    wall = time.perf_counter() - t_start
+    return {
+        "final_loss": losses[-1] if losses else float("nan"),
+        "first_loss": losses[0] if losses else float("nan"),
+        "steps_run": len(losses),
+        "wall_s": wall,
+        "params": params,
+        "losses": losses,
+    }

@@ -1,0 +1,175 @@
+"""AdamW optimizer, hand-rolled (no optax offline), with ZeRO-1 sharding.
+
+State: first/second moments in fp32 (+ step counter).  ``zero1_shardings``
+spreads m/v over ALL mesh axes on the largest dimension of each param —
+optimizer state is pure elementwise, so any sharding is valid; sharding it
+over DP too (what ZeRO-1 does) removes the 8·N bytes of replicated state that
+otherwise dominates per-chip memory at 100B+ scale.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+def init_opt_state(params, *, quant8: bool = False) -> Any:
+    """quant8: store moments as int8 + per-row fp32 scales (8-bit Adam à la
+    Dettmers) — 2 bytes/param of optimizer state instead of 8.  Required to
+    fit 480B-param training in 16 GB/chip at 256 chips (see DESIGN.md §6)."""
+    if not quant8:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def qzeros(p):
+        scale_shape = p.shape[:-1] + (1,) if p.ndim >= 1 else (1,)
+        return {
+            "q": jnp.zeros(p.shape, jnp.int8),
+            "s": jnp.zeros(scale_shape, jnp.float32),
+        }
+
+    return {
+        "m": jax.tree.map(qzeros, params),
+        "v": jax.tree.map(qzeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _is_quant_leaf(x) -> bool:
+    return isinstance(x, dict) and set(x.keys()) == {"q", "s"}
+
+
+def is_quant_state(state) -> bool:
+    """Detect 8-bit moments structurally (pytree-safe under jit)."""
+    found = [False]
+
+    def visit(x):
+        if _is_quant_leaf(x):
+            found[0] = True
+        return x
+
+    jax.tree.map(visit, state["m"], is_leaf=_is_quant_leaf)
+    return found[0]
+
+
+def _dequant(qs) -> jax.Array:
+    return qs["q"].astype(jnp.float32) * qs["s"]
+
+
+def _quant(x: jax.Array):
+    s = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0 if x.ndim >= 1 else jnp.abs(x) / 127.0
+    s = jnp.maximum(s, 1e-12)
+    q = jnp.clip(jnp.round(x / s), -127, 127).astype(jnp.int8)
+    return {"q": q, "s": s}
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_update(
+    cfg: AdamWConfig, params, grads, state
+) -> Tuple[Any, Any, jax.Array]:
+    """Returns (new_params, new_state, grad_norm)."""
+    quant8 = is_quant_state(state)
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bias1 = 1 - b1 ** step.astype(jnp.float32)
+    bias2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        if quant8:
+            m, v = _dequant(m), _dequant(v)
+        g = g.astype(jnp.float32) * clip
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / bias1
+        vhat = v / bias2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        if quant8:
+            m, v = _quant(m), _quant(v)
+        return (newp, m, v)
+
+    is3 = lambda x: isinstance(x, tuple) and len(x) == 3
+    out = jax.tree.map(
+        upd, params, grads, state["m"], state["v"],
+        is_leaf=_is_quant_leaf,
+    )
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=is3)
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=is3)
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=is3)
+    return new_params, {"m": new_m, "v": new_v, "step": step}, gnorm
+
+
+# --------------------------------------------------------------------------
+# ZeRO-1: shard m/v over every mesh axis along each param's largest dim
+# --------------------------------------------------------------------------
+
+
+def _zero1_spec(shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Shard the largest divisible dims greedily over every mesh axis.
+    Optimizer state is elementwise, so ANY sharding is valid; maximal
+    sharding (incl. the DP axes) is what ZeRO-1 buys."""
+    axes: list = [None] * len(shape)
+    for name in mesh.axis_names:
+        size = mesh.shape[name]
+        cands = [
+            (shape[i], i)
+            for i in range(len(shape))
+            if axes[i] is None and shape[i] % size == 0 and shape[i] >= size
+        ]
+        if not cands:
+            continue
+        _, i = max(cands)
+        axes[i] = name
+    return P(*axes)
+
+
+def zero1_shardings(mesh: Mesh, opt_state_shape) -> Any:
+    """Sharding tree matching an opt-state shape tree (fp32 or quant8)."""
+
+    def one(leaf):
+        return NamedSharding(mesh, _zero1_spec(tuple(leaf.shape), mesh))
+
+    return jax.tree.map(one, opt_state_shape)

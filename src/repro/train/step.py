@@ -1,0 +1,80 @@
+"""train_step / serve_step factories — what the launcher jits and lowers.
+
+``make_train_step`` supports gradient accumulation (lax.scan over
+micro-batches) so per-device activation memory stays bounded at 4k×256
+global batches; grads accumulate in the compute dtype.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import Model, cross_entropy_loss
+from .optimizer import AdamWConfig, adamw_update
+
+
+def make_loss_fn(model: Model):
+    def loss_fn(params, batch):
+        logits, aux = model.train_forward(params, batch)
+        return cross_entropy_loss(logits, batch["labels"], aux_loss=aux)
+
+    return loss_fn
+
+
+def make_train_step(
+    model: Model,
+    opt_cfg: AdamWConfig,
+    *,
+    accum_steps: int = 1,
+) -> Callable:
+    loss_fn = make_loss_fn(model)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def split(key, x):
+                if key == "positions":  # [3, B, S] — batch dim is axis 1
+                    return x.reshape(
+                        (x.shape[0], accum_steps, x.shape[1] // accum_steps) + x.shape[2:]
+                    ).swapaxes(0, 1)
+                return x.reshape((accum_steps, x.shape[0] // accum_steps) + x.shape[1:])
+
+            micro = {k: split(k, v) for k, v in batch.items()}
+
+            def body(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                gsum = jax.tree.map(lambda a, b: a + b, gsum, g)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree.map(jnp.zeros_like, params)
+            (grads, loss), _ = jax.lax.scan(body, (g0, jnp.zeros(())), micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = loss / accum_steps
+        new_params, new_opt, gnorm = adamw_update(opt_cfg, params, grads, opt_state)
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model) -> Callable:
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model) -> Callable:
+    def serve_step(params, token_batch, caches, cache_pos):
+        logits, new_caches = model.decode_step(params, token_batch, caches, cache_pos)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, new_caches
+
+    return serve_step

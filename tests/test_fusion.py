@@ -1,0 +1,105 @@
+"""GCOF (Algorithm 1) unit + property tests."""
+
+import hypothesis
+import hypothesis.strategies as st
+import pytest
+
+from repro.core.fusion import DEFAULT_RULES, EIGEN_RULES, RuleIndex, gcof, runtime_fuse
+from repro.core.graph import OpGraph, chain_graph, random_dag
+
+
+def build_fig7_graph():
+    """The paper's Fig. 7 walk-through graph."""
+    g = OpGraph(name="fig7")
+    a0 = g.add("add", output_bytes=10)
+    r0 = g.add("relu", inputs=[a0], output_bytes=10)   # a0 is multi-output
+    a1 = g.add("add", inputs=[a0], output_bytes=10)
+    r1 = g.add("relu", inputs=[a1], output_bytes=10)
+    c1 = g.add("conv", inputs=[r0], output_bytes=10)
+    b1 = g.add("bn", inputs=[c1], output_bytes=10)
+    c2 = g.add("conv", inputs=[b1], output_bytes=10)
+    b2 = g.add("bn", inputs=[c2], output_bytes=10)
+    a2 = g.add("add", inputs=[r1, b2], output_bytes=10)
+    r2 = g.add("relu", inputs=[a2], output_bytes=10)
+    return g
+
+
+def test_paper_fig7_example():
+    g = build_fig7_graph()
+    cg = gcof(g, EIGEN_RULES)
+    types = sorted(n.op_type for n in cg.nodes.values())
+    # conv1∘bn fused (r1); conv2∘bn∘add∘relu fused (r3);
+    # first add,relu NOT fused (multi-output); bound add∘relu released
+    assert "conv∘bn" in types
+    assert "conv∘bn∘add∘relu" in types
+    # the multi-output add,relu pair AND the released bound pair stay unfused
+    assert types.count("add") == 2 and types.count("relu") == 2
+    assert len(cg) == 6
+    cg.validate()
+
+
+def test_multi_output_connection_not_fused():
+    g = OpGraph()
+    c = g.add("conv", output_bytes=1)
+    b = g.add("bn", inputs=[c], output_bytes=1)
+    g.add("relu", inputs=[b], output_bytes=1)
+    g.add("relu", inputs=[b], output_bytes=1)  # bn now multi-output
+    cg = gcof(g, EIGEN_RULES)
+    # conv∘bn ok (conv has 1 out), but bn→relu must not fuse (bn group has 2 outs)
+    assert sorted(n.op_type for n in cg.nodes.values()) == ["conv∘bn", "relu", "relu"]
+
+
+def test_rule_index():
+    idx = RuleIndex(EIGEN_RULES)
+    assert idx.is_rule(("conv", "bn"))
+    assert idx.is_sub_rule(("add", "relu")) and not idx.is_rule(("add", "relu"))
+    assert idx.is_sub_rule(("bn", "add"))
+    assert not idx.is_sub_rule(("relu", "conv"))
+
+
+def test_chain_full_fusion():
+    g = chain_graph(["conv", "bn", "add", "relu"], output_bytes=7)
+    cg = gcof(g, EIGEN_RULES)
+    assert len(cg) == 1
+    (node,) = cg.nodes.values()
+    assert node.op_type == "conv∘bn∘add∘relu"
+    assert node.output_bytes == 7
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(
+    n=st.integers(5, 60),
+    seed=st.integers(0, 10_000),
+    edge_prob=st.floats(0.05, 0.4),
+)
+def test_gcof_properties(n, seed, edge_prob):
+    g = random_dag(n, seed=seed, edge_prob=edge_prob)
+    cg = gcof(g, DEFAULT_RULES)
+    # DAG preserved, internal consistency
+    cg.validate()
+    # coarsening never adds nodes
+    assert len(cg) <= len(g)
+    # fused members partition the original vertex set exactly
+    members = [m for node in cg.nodes.values() for m in node.fused_ids]
+    assert sorted(members) == sorted(g.nodes.keys())
+    # FLOPs and resident memory are conserved
+    assert cg.total_flops() == pytest.approx(g.total_flops(), rel=1e-9)
+    assert cg.total_param_bytes() == pytest.approx(g.total_param_bytes(), rel=1e-9)
+    # fused node HBM traffic never exceeds the sum of its members'
+    for node in cg.nodes.values():
+        orig = sum(g.nodes[m].bytes_accessed for m in node.fused_ids)
+        assert node.bytes_accessed <= orig + 1e-9
+
+
+@hypothesis.settings(max_examples=15, deadline=None)
+@hypothesis.given(n=st.integers(5, 40), seed=st.integers(0, 1000))
+def test_runtime_fuse_respects_placement(n, seed):
+    g = random_dag(n, seed=seed)
+    placement = {nid: nid % 3 for nid in g.nodes}
+    eff, eff_pl = runtime_fuse(g, placement)
+    eff.validate()
+    # every effective node sits entirely on one device
+    for nid, node in eff.nodes.items():
+        devs = {placement[m] for m in node.fused_ids}
+        assert len(devs) == 1
+        assert eff_pl[nid] in devs

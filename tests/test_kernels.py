@@ -1,0 +1,143 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp ref.py oracles
+(interpret=True executes the Pallas kernel bodies on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+rng = np.random.default_rng(42)
+
+
+# ------------------------------------------------------------------ rmsnorm
+@pytest.mark.parametrize("shape", [(4, 128), (2, 7, 256), (1, 300, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_kernel(shape, dtype):
+    from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
+    from repro.models.layers import rmsnorm as ref
+
+    x = jnp.asarray(rng.standard_normal(shape), dtype)
+    w = jnp.asarray(rng.standard_normal(shape[-1]) * 0.1, jnp.float32)
+    out = rmsnorm_pallas(x, w, interpret=True)
+    expect = ref(x, w)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+# --------------------------------------------------------------- flash attn
+CASES = [
+    # b, sq, sk, h, kv, d, window, cap
+    (2, 128, 128, 4, 2, 64, 0, 0.0),
+    (1, 256, 256, 8, 8, 128, 64, 50.0),   # window + softcap (gemma2)
+    (2, 96, 96, 4, 1, 80, 0, 0.0),        # MQA + unaligned dims
+    (1, 128, 384, 2, 2, 64, 0, 0.0),      # long KV (q_offset)
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_kernel(case, dtype):
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+
+    b, sq, sk, h, kv, d, window, cap = case
+    q = jnp.asarray(rng.standard_normal((b, sq, h, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, sk, kv, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, sk, kv, d)), dtype)
+    scale = 1.0 / np.sqrt(d)
+    qo = sk - sq
+    out = flash_attention(
+        q, k, v, scale=scale, causal=True, window=window or None,
+        softcap=cap or None, q_offset=qo, interpret=True,
+    )
+    rep = h // kv
+    qk = q.reshape(b, sq, kv, rep, d).transpose(0, 2, 3, 1, 4).reshape(-1, sq, d)
+    kk = jnp.broadcast_to(k.transpose(0, 2, 1, 3)[:, :, None], (b, kv, rep, sk, d)).reshape(-1, sk, d)
+    vk = jnp.broadcast_to(v.transpose(0, 2, 1, 3)[:, :, None], (b, kv, rep, sk, d)).reshape(-1, sk, d)
+    ref = attention_ref(qk, kk, vk, scale=scale, causal=True, window=window,
+                        softcap=cap, q_offset=qo)
+    ref = ref.reshape(b, kv, rep, sq, d).transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d)
+    tol = 2e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=tol, atol=tol
+    )
+
+
+# ------------------------------------------------------------- grouped gemm
+@pytest.mark.parametrize(
+    "m,k,n,e,sizes",
+    [
+        (256, 256, 128, 4, [64, 0, 128, 64]),
+        (384, 128, 256, 6, None),
+        (96, 128, 128, 3, [0, 96, 0]),
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_gemm_kernel(m, k, n, e, sizes, dtype):
+    from repro.kernels.grouped_gemm.ops import grouped_gemm
+    from repro.kernels.grouped_gemm.ref import grouped_gemm_ref
+
+    if sizes is None:
+        cuts = np.sort(rng.integers(0, m, e - 1))
+        sizes = np.diff(np.concatenate([[0], cuts, [m]]))
+    gs = jnp.asarray(sizes, jnp.int32)
+    x = jnp.asarray(rng.standard_normal((m, k)), dtype)
+    w = jnp.asarray(rng.standard_normal((e, k, n)) * 0.1, dtype)
+    out = grouped_gemm(x, w, gs, interpret=True)
+    ref = grouped_gemm_ref(x, w, gs)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=tol, atol=tol
+    )
+
+
+# ----------------------------------------------------------------- ssd scan
+@pytest.mark.parametrize(
+    "B,S,H,P,G,N,chunk",
+    [
+        (2, 64, 4, 16, 1, 32, 16),
+        (1, 128, 8, 64, 2, 64, 32),
+        (2, 50, 4, 16, 4, 32, 16),     # padding path
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_kernel(B, S, H, P, G, N, chunk, dtype):
+    from repro.kernels.ssd_scan.ops import ssd_scan
+    from repro.kernels.ssd_scan.ref import ssd_ref
+
+    x = jnp.asarray(rng.standard_normal((B, S, H, P)), dtype)
+    dt = jnp.asarray(np.abs(rng.standard_normal((B, S, H))) * 0.1 + 0.01, jnp.float32)
+    a = -jnp.asarray(np.abs(rng.standard_normal(H)) + 0.5, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((B, S, G, N)), dtype)
+    c = jnp.asarray(rng.standard_normal((B, S, G, N)), dtype)
+    y, st = ssd_scan(x, dt, a, b, c, chunk=chunk, interpret=True)
+    yr, str_ = ssd_ref(x, dt, a, b, c, chunk)
+    scale = float(jnp.max(jnp.abs(yr.astype(jnp.float32)))) + 1e-9
+    tol = 1e-5 if dtype == jnp.float32 else 4e-2
+    assert float(jnp.max(jnp.abs(y.astype(jnp.float32) - yr.astype(jnp.float32)))) / scale < tol
+    s_scale = float(jnp.max(jnp.abs(str_))) + 1e-9
+    assert float(jnp.max(jnp.abs(st - str_))) / s_scale < tol
+
+
+def test_flash_attention_matches_model_attention():
+    """Kernel path == the model's chunked/naive path on a real config."""
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.models.layers import _naive_attention
+
+    b, s, h, kv, d = 2, 128, 4, 2, 64
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
+    scale = 1.0 / np.sqrt(d)
+    out_kernel = flash_attention(q, k, v, scale=scale, causal=True, interpret=True)
+    qg = q.reshape(b, s, kv, h // kv, d)
+    out_model = _naive_attention(
+        qg, k, v, jnp.arange(s), jnp.arange(s),
+        causal=True, window=None, cap=None, scale=scale,
+    ).reshape(b, s, h, d)
+    np.testing.assert_allclose(
+        np.asarray(out_kernel), np.asarray(out_model), rtol=2e-4, atol=2e-4
+    )

@@ -1,0 +1,58 @@
+"""Graph generators: validity, cost metadata sanity, paper-model grid."""
+
+import math
+
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.core.fusion import DEFAULT_RULES, gcof
+from repro.core.modelgraph import PAPER_MODELS, paper_graph, transformer_graph
+from repro.models.model import param_count_shape
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "qwen2-moe-a2.7b", "gemma2-27b"])
+@pytest.mark.parametrize("granularity", ["fine", "layer", "block"])
+def test_transformer_graph_valid(arch, granularity):
+    cfg = get_config(arch)
+    g = transformer_graph(cfg, seq_len=512, granularity=granularity)
+    g.validate()
+    assert g.total_flops() > 0
+    if granularity == "block":
+        # chain: embed + L blocks + head
+        assert len(g) == cfg.n_layers + 2
+
+
+def test_block_graph_param_bytes_tracks_model():
+    """Placement-graph resident memory ≈ the real parameter bytes."""
+    cfg = get_config("llama3.2-1b")
+    g = transformer_graph(cfg, seq_len=512, granularity="block")
+    graph_bytes = g.total_param_bytes()
+    real_bytes = param_count_shape(cfg) * 2  # bf16
+    assert graph_bytes == pytest.approx(real_bytes, rel=0.15)
+
+
+@pytest.mark.parametrize("name", list(PAPER_MODELS))
+def test_paper_graphs_valid_and_coarsen(name):
+    g = paper_graph(name)
+    g.validate()
+    cg = gcof(g, DEFAULT_RULES)
+    cg.validate()
+    ratio = len(cg) / len(g)
+    assert 0.5 < ratio < 1.0, (name, ratio)    # Table IV regime
+    assert cg.total_flops() == pytest.approx(g.total_flops())
+
+
+def test_moe_graph_has_parallel_branches():
+    g = transformer_graph(get_config("arctic-480b"), seq_len=256, granularity="fine")
+    # at least one layer has ≥4 sibling expert branches (width > chain)
+    from repro.core.hierarchy import chain_contract
+
+    cg, _ = chain_contract(g)
+    widths = {}
+    order = cg.topo_order()
+    depth = {}
+    for nid in order:
+        node = cg.nodes[nid]
+        depth[nid] = 1 + max((depth[p] for p in node.inputs), default=0)
+        widths[depth[nid]] = widths.get(depth[nid], 0) + 1
+    assert max(widths.values()) >= 4

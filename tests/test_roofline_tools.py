@@ -1,0 +1,75 @@
+"""Roofline plumbing: HLO collective parser + term derivation."""
+
+import pytest
+
+from repro.configs.base import ShapeConfig
+from repro.configs import get_config
+from repro.launch.roofline import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS_BF16,
+    collective_bytes_from_hlo,
+    roofline_terms,
+)
+
+HLO_SAMPLE = """
+HloModule jit_step
+%fused (a: f32[128,256]) -> f32[128,256] {
+  %x = bf16[8,128]{1,0} all-gather(bf16[1,128]{1,0} %p), replica_groups=...
+  %y = f32[64,64]{1,0} all-reduce(f32[64,64]{1,0} %q), to_apply=%add
+  %z = (bf16[4,32]{1,0}, bf16[4,32]{1,0}) all-to-all(%a, %b)
+  %w = f32[16]{0} reduce-scatter(f32[256]{0} %r)
+  %cp = bf16[2,2]{1,0} collective-permute(bf16[2,2]{1,0} %s)
+  %ar2 = f32[10,10]{1,0} all-reduce-start(f32[10,10]{1,0} %t)
+  %ar2d = f32[10,10]{1,0} all-reduce-done(f32[10,10]{1,0} %ar2)
+}
+"""
+
+
+def test_collective_parser_kinds_and_bytes():
+    out = collective_bytes_from_hlo(HLO_SAMPLE)
+    assert out["by_kind"]["all-gather"] == 8 * 128 * 2
+    assert out["by_kind"]["all-reduce"] == 64 * 64 * 4 + 10 * 10 * 4  # start counted once
+    assert out["by_kind"]["all-to-all"] == 2 * (4 * 32 * 2)           # tuple result
+    assert out["by_kind"]["reduce-scatter"] == 16 * 4
+    assert out["by_kind"]["collective-permute"] == 2 * 2 * 2
+    assert out["total"] == sum(out["by_kind"].values())
+
+
+def test_collective_parser_ignores_non_collectives():
+    out = collective_bytes_from_hlo("%m = f32[4,4] dot(%a, %b)\n%n = f32[4] add(%c, %d)")
+    assert out["total"] == 0
+
+
+def test_roofline_terms_math():
+    cfg = get_config("llama3.2-1b")
+    shape = ShapeConfig("train_4k", seq_len=4096, global_batch=256, kind="train")
+    cell = {
+        "flops_per_device": PEAK_FLOPS_BF16,        # exactly 1s of compute
+        "bytes_per_device": HBM_BW * 2,             # 2s of memory
+        "collective_bytes_per_device": ICI_BW * 0.5,
+        "n_devices": 256,
+        "active_params": 1_000_000,
+    }
+    terms = roofline_terms(cell, cfg, shape)
+    assert terms["t_compute_s"] == pytest.approx(1.0)
+    assert terms["t_memory_s"] == pytest.approx(2.0)
+    assert terms["t_collective_s"] == pytest.approx(0.5)
+    assert terms["dominant"] == "memory"
+    assert terms["step_time_lb_s"] == pytest.approx(2.0)
+    # MODEL_FLOPS = 6 N D for train
+    assert terms["model_flops"] == pytest.approx(6 * 1e6 * 256 * 4096)
+
+
+def test_decode_model_flops_uses_one_token():
+    cfg = get_config("llama3.2-1b")
+    shape = ShapeConfig("decode_32k", seq_len=32768, global_batch=128, kind="decode")
+    cell = {
+        "flops_per_device": 1e12,
+        "bytes_per_device": 1e9,
+        "collective_bytes_per_device": 0.0,
+        "n_devices": 256,
+        "active_params": 1_000_000,
+    }
+    terms = roofline_terms(cell, cfg, shape)
+    assert terms["model_flops"] == pytest.approx(2 * 1e6 * 128)
