@@ -14,7 +14,10 @@ from typing import List
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="small model grid")
-    ap.add_argument("--sections", default="table_iv,fig4,fig10,table_v,roofline,bw_sens")
+    ap.add_argument(
+        "--sections",
+        default="table_iv,fig4,fig10,table_v,roofline,bw_sens,throughput",
+    )
     args = ap.parse_args()
 
     csv: List[str] = []
@@ -46,6 +49,10 @@ def main() -> None:
         from . import bandwidth_sensitivity
 
         bandwidth_sensitivity.run(csv, trials=2 if args.fast else 5)
+    if "throughput" in sections:
+        from . import throughput_sweep
+
+        throughput_sweep.run(csv, time_limit=time_limit)
 
     print("\n# CSV (name,us_per_call,derived)")
     for line in csv:

@@ -8,7 +8,6 @@ import jax
 
 from repro.configs import get_config
 from repro.core.devices import tpu_slice_cluster
-from repro.core.placement import PlanConfig
 from repro.models.model import build_model
 from repro.serving.engine import Request, ServingEngine
 
@@ -21,13 +20,11 @@ def main():
     # a heterogeneous cluster of TPU slices (fast/slow alternating)
     cluster = tpu_slice_cluster(n_slices=max(len(jax.devices()), 1),
                                 heterogeneous=True)
-    engine = ServingEngine(
-        cfg, params, cluster,
-        slots=4, max_len=128,
-        plan_cfg=PlanConfig(method="moirai", time_limit=10, mip_rel_gap=0.05),
-        eos_id=-1,
-    )
-    print(f"placement via {engine.placement_result.method}; "
+    # slots > 1 → the engine plans for steady-state THROUGHPUT by default
+    # (bottleneck-stage time), not single-query makespan
+    engine = ServingEngine(cfg, params, cluster, slots=4, max_len=128, eos_id=-1)
+    print(f"placement via {engine.placement_result.method} "
+          f"(objective={engine.plan_cfg.objective}); "
           f"{len(engine.executor.stages)} stage(s) on {len(engine.devices)} device(s)")
 
     reqs = [

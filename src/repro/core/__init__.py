@@ -6,7 +6,16 @@ from .fusion import DEFAULT_RULES, EIGEN_RULES, XLA_RULES, gcof, runtime_fuse
 from .graph import AugmentedDAG, OpGraph, OpNode, augment
 from .milp import PlacementResult, solve_placement
 from .placement import PlanConfig, plan, replan
-from .simulate import SimResult, evaluate, simulate, validate_schedule
+from .simulate import (
+    PipelineResult,
+    SimResult,
+    bottleneck_time,
+    evaluate,
+    simulate,
+    simulate_pipeline,
+    validate_pipeline_schedule,
+    validate_schedule,
+)
 
 __all__ = [
     "AugmentedDAG",
@@ -17,17 +26,21 @@ __all__ = [
     "EIGEN_RULES",
     "OpGraph",
     "OpNode",
+    "PipelineResult",
     "PlacementResult",
     "PlanConfig",
     "SimResult",
     "XLA_RULES",
     "augment",
+    "bottleneck_time",
     "evaluate",
     "gcof",
     "get_cluster",
     "plan",
     "replan",
     "simulate",
+    "simulate_pipeline",
     "solve_placement",
+    "validate_pipeline_schedule",
     "validate_schedule",
 ]

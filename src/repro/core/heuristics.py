@@ -13,6 +13,12 @@
   whose co-location saves the largest communication cost); a device that
   finishes task i prefers i's favorite child, otherwise falls back to the
   earliest-start rule.  Memory-capped per device as in Baechi.
+* ``bottleneck_balance`` — throughput-oriented list scheduler: instead of the
+  earliest finish (a latency objective), each ready task goes to the device
+  minimizing the resulting *bottleneck-stage time* — the largest per-request
+  busy time over any device or channel — which is the steady-state completion
+  interval of a saturated serving pipeline (see core.simulate.bottleneck_time
+  and the pipelined partitioning objective of Tarnawski et al.).
 * ``round_robin`` / ``single_device`` — sanity baselines.
 
 All heuristics return a ``PlacementResult`` whose ``objective`` is their own
@@ -55,10 +61,19 @@ def _greedy_list_schedule(
     eligible: Optional[Dict[int, List[int]]] = None,
     favorite: Optional[Dict[int, int]] = None,
     name: str = "etf",
+    candidate_key=None,
+    on_commit=None,
+    objective_fn=None,
 ) -> PlacementResult:
-    """Shared engine for ETF/GETF/m-SCT: pick (ready task, device) with the
-    earliest finish, respecting memory; ``eligible`` restricts device choices
-    per task; ``favorite`` gives m-SCT's co-location preference."""
+    """Shared engine for every list scheduler: pick the (ready task, device)
+    candidate with the smallest key, respecting memory.
+
+    ``eligible`` restricts device choices per task; ``favorite`` gives
+    m-SCT's co-location preference.  ``candidate_key(nid, k, s, f)``
+    overrides the earliest-finish ordering entirely (bottleneck_balance);
+    ``on_commit(nid, k)`` lets the caller maintain its own scoring state;
+    ``objective_fn()`` overrides the reported objective (default: makespan
+    of the internal schedule)."""
     t0 = _time.perf_counter()
     K = cost.cluster.k
     caps = np.array([d.mem_bytes for d in cost.cluster.devices])
@@ -84,13 +99,16 @@ def _greedy_list_schedule(
                     continue
                 s = max(dev_free[k], _comm_ready_time(cost, graph, nid, k, placement, end))
                 f = s + cost.compute_time(node, k)
-                # m-SCT preference: a device whose last op designated nid as
-                # favorite child gets a tie-breaking bonus (co-location)
-                fav_bonus = (
-                    favorite is not None
-                    and favorite.get(last_on_dev.get(k, -1)) == nid
-                )
-                key = (s, not fav_bonus, f, nid, k)
+                if candidate_key is not None:
+                    key = candidate_key(nid, k, s, f)
+                else:
+                    # m-SCT preference: a device whose last op designated nid
+                    # as favorite child gets a tie-breaking bonus (co-location)
+                    fav_bonus = (
+                        favorite is not None
+                        and favorite.get(last_on_dev.get(k, -1)) == nid
+                    )
+                    key = (s, not fav_bonus, f, nid, k)
                 if best is None or key < best[0]:
                     best = (key, nid, k, s, f)
         if best is None:
@@ -107,6 +125,8 @@ def _greedy_list_schedule(
         usage[k] += graph.nodes[nid].param_bytes
         dev_free[k] = f
         last_on_dev[k] = nid
+        if on_commit is not None:
+            on_commit(nid, k)
         ready.discard(nid)
         for succ in graph.nodes[nid].outputs:
             indeg[succ] -= 1
@@ -114,9 +134,13 @@ def _greedy_list_schedule(
                 ready.add(succ)
 
     feasible = bool(np.all(usage <= caps))
+    if objective_fn is not None:
+        obj = objective_fn()
+    else:
+        obj = max(end.values()) if end else 0.0
     return PlacementResult(
         placement=placement,
-        objective=max(end.values()) if end else 0.0,
+        objective=obj,
         status="feasible" if feasible else "memory-relaxed",
         mip_gap=float("nan"),
         solve_time=_time.perf_counter() - t0,
@@ -164,6 +188,59 @@ def msct(graph: OpGraph, cost: CostModel) -> PlacementResult:
         if node.outputs:
             favorite[nid] = max(node.outputs, key=lambda s: (bottom[s], -s))
     return _greedy_list_schedule(graph, cost, favorite=favorite, name="m-sct")
+
+
+def bottleneck_balance(graph: OpGraph, cost: CostModel) -> PlacementResult:
+    """Throughput list scheduler: greedily minimize the bottleneck-stage time.
+
+    Tasks are taken in ready order; each is placed on the device whose choice
+    yields the smallest max-loaded resource (device compute busy + directed
+    channel busy, per request), tie-broken by earliest finish (so the
+    schedule stays latency-sane among equal-bottleneck choices).  Runs on the
+    shared list-schedule engine — the memory handling and ready-set logic are
+    the common ones; only the candidate scoring differs."""
+    K = cost.cluster.k
+    dev_busy = np.zeros(K)                        # per-request compute busy
+    chan_busy: Dict[Tuple[int, int], float] = {}  # per-request channel busy
+    placed: Dict[int, int] = {}
+
+    def _key(nid: int, k: int, s: float, f: float):
+        node = graph.nodes[nid]
+        peak = dev_busy[k] + cost.compute_time(node, k)
+        for j in range(K):
+            if j != k and dev_busy[j] > peak:
+                peak = dev_busy[j]
+        extra: Dict[Tuple[int, int], float] = {}
+        for p in node.inputs:
+            kp = placed[p]
+            if kp != k:
+                t = cost.comm_time(graph.nodes[p].output_bytes, kp, k)
+                extra[(kp, k)] = extra.get((kp, k), 0.0) + t
+        for ch, t in chan_busy.items():
+            peak = max(peak, t + extra.pop(ch, 0.0))
+        for t in extra.values():
+            peak = max(peak, t)
+        return (peak, f, nid, k)
+
+    def _commit(nid: int, k: int):
+        node = graph.nodes[nid]
+        placed[nid] = k
+        dev_busy[k] += cost.compute_time(node, k)
+        for p in node.inputs:
+            kp = placed[p]
+            if kp != k:
+                t = cost.comm_time(graph.nodes[p].output_bytes, kp, k)
+                chan_busy[(kp, k)] = chan_busy.get((kp, k), 0.0) + t
+
+    def _objective():
+        # bottleneck-stage time of the final placement, not makespan
+        peak = float(dev_busy.max()) if K else 0.0
+        return max(peak, max(chan_busy.values())) if chan_busy else peak
+
+    return _greedy_list_schedule(
+        graph, cost, name="bottleneck-balance",
+        candidate_key=_key, on_commit=_commit, objective_fn=_objective,
+    )
 
 
 def round_robin(graph: OpGraph, cost: CostModel) -> PlacementResult:

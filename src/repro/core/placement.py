@@ -6,6 +6,21 @@
 elastic serving (device failure / cluster resize) by re-solving on the
 surviving devices — placement is fast relative to model lifetime, which is
 exactly the regime the paper targets (offline placement, online serving).
+
+Planning objectives
+-------------------
+``PlanConfig.objective`` selects what a candidate placement is scored by:
+
+* ``"latency"`` (default, the paper's Eqs. 4–8): single-query makespan from
+  the event simulator — right for interactive, one-request-at-a-time use.
+* ``"throughput"``: bottleneck-stage time — the largest per-request busy
+  time over any device or channel (``core.simulate.bottleneck_time``).  In a
+  saturated serving pipeline requests complete once per bottleneck interval,
+  so minimizing it maximizes steady-state requests/sec even when it costs
+  single-query latency (classic pipelined-partitioning objective; see
+  Tarnawski et al.).  The throughput objective widens the moirai envelope
+  with the ``bottleneck_balance`` list scheduler and re-scores the MILP
+  solution and every heuristic candidate by bottleneck time.
 """
 
 from __future__ import annotations
@@ -18,7 +33,14 @@ from .costmodel import CostModel
 from .devices import ClusterSpec
 from .fusion import DEFAULT_RULES, gcof
 from .graph import OpGraph
-from .heuristics import etf, getf, msct, round_robin, single_device
+from .heuristics import (
+    bottleneck_balance,
+    etf,
+    getf,
+    msct,
+    round_robin,
+    single_device,
+)
 from .hierarchy import (
     _count_unordered_pairs,
     chain_contract,
@@ -33,7 +55,13 @@ MILP_EXACT_MAX_NODES = 48
 
 @dataclass
 class PlanConfig:
-    method: str = "moirai"           # moirai|etf|getf|msct|placeto|round_robin|single
+    method: str = "moirai"           # moirai|etf|getf|msct|bottleneck_balance|placeto|round_robin|single
+    # "latency" (makespan) | "throughput" (bottleneck-stage time).  Selects
+    # what the MOIRAI envelope scores candidates by; the explicit heuristic
+    # methods each optimize their own intrinsic criterion regardless (use
+    # method="bottleneck_balance" for a standalone throughput heuristic).
+    # extra["objective"] always records the CONFIGURED objective.
+    objective: str = "latency"
     coarsen: bool = True             # GCOF (Fig. 10 c/d vs a/b)
     rules: Optional[Sequence[Sequence[str]]] = None
     time_limit: float = 120.0
@@ -59,9 +87,25 @@ def plan(
     for k, v in overrides.items():
         setattr(cfg, k, v)
     cost = cost or CostModel(cluster)
+    if cfg.objective not in ("latency", "throughput"):
+        raise ValueError(f"unknown objective {cfg.objective!r}")
 
     t0 = _time.perf_counter()
     rules = cfg.rules if cfg.rules is not None else DEFAULT_RULES
+
+    from .simulate import bottleneck_time as _bneck, simulate as _sim
+
+    def _score(g_, pl) -> float:
+        """What a candidate placement is worth under the configured objective."""
+        if cfg.objective == "throughput":
+            return _bneck(g_, pl, cost)
+        return _sim(g_, pl, cost).makespan
+
+    # the heuristic candidate pool; the throughput objective adds the
+    # bottleneck-balancing scheduler (the others all chase earliest finish)
+    heuristic_pool = (msct, etf, getf)
+    if cfg.objective == "throughput":
+        heuristic_pool = heuristic_pool + (bottleneck_balance,)
 
     # ------------------------------------------------ step 2: coarsening
     work = gcof(graph, rules) if cfg.coarsen else graph
@@ -91,12 +135,11 @@ def plan(
                 target, member_to_super = cluster_graph(work, cfg.max_exact_nodes)
         # prime the exact solve with the best heuristic schedule: a greedy
         # list schedule satisfies every MILP constraint family, so its
-        # makespan is a valid incumbent bound (T ≤ UB) and a tight big-M
-        from .simulate import simulate as _sim
-
-        # UB prime for the MILP: best heuristic schedule ON THE TARGET graph
+        # makespan is a valid incumbent bound (T ≤ UB) and a tight big-M.
+        # The UB is always a MAKESPAN (the MILP's objective) even when the
+        # envelope below scores candidates by bottleneck time.
         ub = None
-        for h in (msct, etf, getf):
+        for h in heuristic_pool:
             r = h(target, cost)
             if r.status == "feasible":
                 mk = _sim(target, r.placement, cost).makespan
@@ -118,31 +161,33 @@ def plan(
 
         # envelope on the UNCONTRACTED work graph: under a bounded solver
         # budget (and through lossy contraction) the MILP route may not beat
-        # a plain list schedule — Moirai returns whichever placement
-        # simulates faster, so Moirai ≥ best heuristic always holds (with
-        # unbounded budget the exact MILP alone is optimal, as in the paper)
-        mk_milp = (
-            _sim(work, coarse_placement, cost).makespan
+        # a plain list schedule — Moirai returns whichever placement SCORES
+        # best under the configured objective (makespan for "latency",
+        # bottleneck-stage time for "throughput"), so Moirai ≥ best
+        # heuristic always holds (with unbounded budget the exact MILP alone
+        # is makespan-optimal, as in the paper)
+        sc_milp = (
+            _score(work, coarse_placement)
             if coarse_placement
             else float("inf")
         )
-        best_h, mk_h = None, float("inf")
-        for h in (msct, etf, getf):
+        best_h, sc_h = None, float("inf")
+        for h in heuristic_pool:
             r = h(work, cost)
             if r.status != "feasible":
                 continue
-            mk = _sim(work, r.placement, cost).makespan
-            if mk < mk_h:
-                best_h, mk_h = r, mk
-        if best_h is not None and mk_h < mk_milp:
+            sc = _score(work, r.placement)
+            if sc < sc_h:
+                best_h, sc_h = r, sc
+        if best_h is not None and sc_h < sc_milp:
             best_h.method = f"moirai[envelope={best_h.method}]"
-            best_h.extra["milp_makespan"] = mk_milp
-            best_h.extra["envelope_makespan"] = mk_h
+            best_h.extra["milp_score"] = sc_milp
+            best_h.extra["envelope_score"] = sc_h
             res = best_h
             coarse_placement = res.placement
         else:
-            res.extra["envelope_makespan"] = mk_milp
-            res.extra["heuristic_best"] = mk_h
+            res.extra["envelope_score"] = sc_milp
+            res.extra["heuristic_best"] = sc_h
     elif cfg.method == "etf":
         res = etf(work, cost)
         coarse_placement = res.placement
@@ -151,6 +196,9 @@ def plan(
         coarse_placement = res.placement
     elif cfg.method == "msct":
         res = msct(work, cost)
+        coarse_placement = res.placement
+    elif cfg.method == "bottleneck_balance":
+        res = bottleneck_balance(work, cost)
         coarse_placement = res.placement
     elif cfg.method == "placeto":
         from .placeto import placeto  # lazy: pulls in jax
@@ -175,6 +223,7 @@ def plan(
     res.placement = placement
     res.solve_time = _time.perf_counter() - t0
     res.extra["coarsened"] = cfg.coarsen
+    res.extra["objective"] = cfg.objective
     res.extra["n_original"] = len(graph)
     res.extra["n_coarse"] = len(work)
     return res
@@ -183,19 +232,43 @@ def plan(
 def replan(
     graph: OpGraph,
     cluster: ClusterSpec,
-    failed_device: int,
+    failed_device,
     config: Optional[PlanConfig] = None,
 ) -> PlacementResult:
-    """Elastic re-placement after losing ``failed_device``.
+    """Elastic re-placement after losing one device (int) or several
+    accumulated failures (iterable of ints).
 
     Returns a placement over the SURVIVING device indices of the *original*
     cluster (so the executor can keep its device handles)."""
-    surviving = [i for i in range(cluster.k) if i != failed_device]
-    sub = cluster.without_device(failed_device)
+    failed = (
+        [failed_device]
+        if isinstance(failed_device, int)
+        else sorted(set(failed_device))
+    )
+    if not all(0 <= i < cluster.k for i in failed):
+        raise ValueError(f"failed devices {failed} out of range for k={cluster.k}")
+    surviving = [i for i in range(cluster.k) if i not in failed]
+    if not surviving:
+        raise ValueError("no surviving devices to re-plan on")
+    # remove in descending index order so earlier indices stay stable
+    sub = cluster
+    for i in sorted(failed, reverse=True):
+        sub = sub.without_device(i)
     res = plan(graph, sub, config)
     res.placement = {nid: surviving[k] for nid, k in res.placement.items()}
-    res.extra["failed_device"] = failed_device
+    res.extra["failed_devices"] = failed
+    if len(failed) == 1:
+        res.extra["failed_device"] = failed[0]
     return res
 
 
-METHODS = ("moirai", "etf", "getf", "msct", "placeto", "round_robin", "single")
+METHODS = (
+    "moirai",
+    "etf",
+    "getf",
+    "msct",
+    "bottleneck_balance",
+    "placeto",
+    "round_robin",
+    "single",
+)

@@ -14,6 +14,30 @@ straggler hedging.  Semantics match the paper's execution model:
 The scheduler is earliest-ready-first per resource (classic list scheduling),
 which is how PyTorch/XLA actually dispatch a placed graph.  The simulator
 returns the full schedule so tests can verify every MILP constraint holds.
+
+Pipelined (multi-request) execution model
+-----------------------------------------
+:func:`simulate` answers "how long does ONE query take?" — the paper's
+makespan objective (Eqs. 4–8).  A serving system under load cares about a
+different quantity: how many queries per second flow through the placement
+when many requests are in flight at once.  :func:`simulate_pipeline`
+generalizes the event loop to N requests:
+
+* each request is an independent copy of the task graph (its own precedence
+  edges), released when the request arrives (and, with ``max_in_flight``,
+  admitted only when a serving slot frees — continuous batching);
+* devices and channels are SHARED across requests with the exact same
+  semantics as the single-query simulator: one op at a time per device
+  (Eq. 6), serialized flows per directed channel (Eq. 8), zero-cost
+  co-located flows (Eq. 7);
+* with ``n_requests=1`` the pipelined simulator reduces *exactly* to
+  :func:`simulate` (same dispatch order, same floating-point sums).
+
+In steady state the completion interval converges to the *bottleneck stage
+time* — the largest per-request busy time over any single resource — which
+:func:`bottleneck_time` computes analytically; the throughput planning
+objective (``PlanConfig.objective="throughput"``) minimizes that quantity
+instead of the makespan.
 """
 
 from __future__ import annotations
@@ -36,38 +60,18 @@ class TaskRecord:
     end: float
 
 
-@dataclass
-class SimResult:
-    makespan: float
-    schedule: Dict[int, TaskRecord]
-    aug: AugmentedDAG
-
-    def device_busy(self, k: int) -> float:
-        return sum(
-            r.end - r.start
-            for r in self.schedule.values()
-            if r.resource == ("dev", k)
-        )
-
-
-def simulate(
+def _task_table(
     graph: OpGraph,
     placement: Mapping[int, int],
     cost: CostModel,
-    *,
-    aug: Optional[AugmentedDAG] = None,
-    priority: Optional[Mapping[int, float]] = None,
-) -> SimResult:
-    """Simulate ``graph`` under ``placement`` (op id -> device idx).
+    aug: AugmentedDAG,
+) -> Tuple[Dict[int, float], Dict[int, Tuple], Dict[int, List[int]], Dict[int, List[int]]]:
+    """(dur, resource, deps, fanout) for every op and comm task.
 
-    ``priority`` (lower = sooner) overrides the earliest-ready-first dispatch
-    order per resource — used to execute the MILP's own schedule order (the
-    runtime dispatches tasks in the solver's S_i order)."""
-    aug = aug or augment(graph)
-
-    # --- task table -------------------------------------------------------
-    # op tasks: duration p_ik on their device
-    # comm tasks: duration p_comm on channel (dev(src), dev(dst)); 0 if same dev
+    Shared by `simulate` and `simulate_pipeline` — the documented
+    n_requests=1 equivalence depends on both using identical task semantics:
+    op tasks run for p_ik on ("dev", k); comm tasks run for p_comm on
+    ("chan", src_dev, dst_dev), or for 0 on ("local",) when co-located."""
     dur: Dict[int, float] = {}
     resource: Dict[int, Tuple] = {}
     deps: Dict[int, List[int]] = {}      # task -> prerequisite tasks
@@ -93,6 +97,41 @@ def simulate(
         fanout.setdefault(c.src, []).append(q)
         deps[c.dst].append(q)
 
+    return dur, resource, deps, fanout
+
+
+def _device_busy(schedule: Mapping, k: int) -> float:
+    """Total busy seconds of device ``k`` over any schedule's records."""
+    return sum(
+        r.end - r.start for r in schedule.values() if r.resource == ("dev", k)
+    )
+
+
+@dataclass
+class SimResult:
+    makespan: float
+    schedule: Dict[int, TaskRecord]
+    aug: AugmentedDAG
+
+    def device_busy(self, k: int) -> float:
+        return _device_busy(self.schedule, k)
+
+
+def simulate(
+    graph: OpGraph,
+    placement: Mapping[int, int],
+    cost: CostModel,
+    *,
+    aug: Optional[AugmentedDAG] = None,
+    priority: Optional[Mapping[int, float]] = None,
+) -> SimResult:
+    """Simulate ``graph`` under ``placement`` (op id -> device idx).
+
+    ``priority`` (lower = sooner) overrides the earliest-ready-first dispatch
+    order per resource — used to execute the MILP's own schedule order (the
+    runtime dispatches tasks in the solver's S_i order)."""
+    aug = aug or augment(graph)
+    dur, resource, deps, fanout = _task_table(graph, placement, cost, aug)
     n_deps = {t: len(d) for t, d in deps.items()}
 
     # --- event loop -------------------------------------------------------
@@ -212,6 +251,282 @@ def validate_schedule(
     for q, c in aug.comm.items():
         if placement[c.src] == placement[c.dst]:
             assert sched[q].end - sched[q].start <= atol
+
+
+# --------------------------------------------------------------------------
+# Pipelined multi-request simulation (steady-state throughput).
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class PipelineResult:
+    """Outcome of a multi-request pipelined simulation.
+
+    ``schedule`` is keyed by ``(request_id, task_id)``; task ids are the op /
+    comm ids of the shared :class:`AugmentedDAG` (every request executes the
+    same placed graph).
+    """
+
+    n_requests: int
+    makespan: float                           # last completion time
+    arrivals: List[float]                     # per-request arrival times
+    completions: List[float]                  # per-request completion times
+    schedule: Dict[Tuple[int, int], TaskRecord]
+    aug: AugmentedDAG
+
+    # ---------------------------------------------------------- throughput
+    @property
+    def latencies(self) -> List[float]:
+        return [c - a for a, c in zip(self.arrivals, self.completions)]
+
+    @property
+    def throughput(self) -> float:
+        """Completed requests per second over the whole simulated window."""
+        span = self.makespan - min(self.arrivals)
+        return self.n_requests / span if span > 0 else math.inf
+
+    @property
+    def steady_throughput(self) -> float:
+        """Asymptotic completions/sec: excludes pipeline fill by measuring
+        the interval between the first and last completion."""
+        if self.n_requests < 2:
+            return self.throughput
+        done = sorted(self.completions)
+        span = done[-1] - done[0]
+        return (self.n_requests - 1) / span if span > 0 else math.inf
+
+    def latency_percentile(self, p: float) -> float:
+        lats = sorted(self.latencies)
+        if not lats:
+            return 0.0
+        idx = min(len(lats) - 1, max(0, math.ceil(p / 100.0 * len(lats)) - 1))
+        return lats[idx]
+
+    def latency_percentiles(self) -> Dict[str, float]:
+        return {f"p{p}": self.latency_percentile(p) for p in (50, 95, 99)}
+
+    # ---------------------------------------------------------- utilization
+    def device_busy(self, k: int) -> float:
+        return _device_busy(self.schedule, k)
+
+    def device_util(self, k: int) -> float:
+        return self.device_busy(k) / self.makespan if self.makespan > 0 else 0.0
+
+    def utilization(self, n_devices: int) -> Dict[int, float]:
+        return {k: self.device_util(k) for k in range(n_devices)}
+
+
+def _resolve_arrivals(n_requests: int, arrival) -> List[float]:
+    """``arrival``: None/0 → all at t=0 (saturated); float → fixed
+    inter-arrival gap; sequence → explicit per-request times."""
+    if arrival is None:
+        return [0.0] * n_requests
+    if isinstance(arrival, (int, float)):
+        return [i * float(arrival) for i in range(n_requests)]
+    arrivals = [float(a) for a in arrival]
+    if len(arrivals) != n_requests:
+        raise ValueError(
+            f"arrival sequence has {len(arrivals)} entries for {n_requests} requests"
+        )
+    return arrivals
+
+
+def simulate_pipeline(
+    graph: OpGraph,
+    placement: Mapping[int, int],
+    cost: CostModel,
+    n_requests: int,
+    arrival=None,
+    *,
+    max_in_flight: Optional[int] = None,
+    aug: Optional[AugmentedDAG] = None,
+) -> PipelineResult:
+    """Simulate ``n_requests`` copies of the placed graph sharing one cluster.
+
+    ``max_in_flight`` caps concurrency (serving slots): a request is admitted
+    — its root tasks released — only once fewer than ``max_in_flight``
+    requests are unfinished, at ``max(arrival, slot-free time)``."""
+    if n_requests < 1:
+        raise ValueError("n_requests must be >= 1")
+    aug = aug or augment(graph)
+    arrivals = _resolve_arrivals(n_requests, arrival)
+    if arrivals != sorted(arrivals):
+        raise ValueError("arrival times must be non-decreasing")
+
+    # per-task static data, identical for every request
+    dur, resource, deps, fanout = _task_table(graph, placement, cost, aug)
+    roots = [t for t, d in deps.items() if not d]
+    tasks_per_request = len(dur)
+
+    # --- event loop over (request, task) keys -----------------------------
+    # A request's roots enter the ready queues only via an ADMISSION event at
+    # its release time, so every queued task is ready "now" — a freed device
+    # never commits to a future-ready task over one that becomes ready
+    # sooner (future arrivals would otherwise cause head-of-line blocking).
+    ready: Dict[Tuple, List[Tuple[float, int, int]]] = {}
+    free_at: Dict[Tuple, float] = {}
+    running: Dict[Tuple, Optional[Tuple[int, int]]] = {}
+
+    # events: (time, seq, ("task", rid, tid)) | (time, seq, ("admit", rid))
+    events: List[Tuple[float, int, Tuple]] = []
+    seq = 0
+    schedule: Dict[Tuple[int, int], TaskRecord] = {}
+    remaining = {r: tasks_per_request for r in range(n_requests)}
+    n_deps: Dict[Tuple[int, int], int] = {}
+    completions = [0.0] * n_requests
+    completed_requests = 0
+
+    def _kind(task: int) -> str:
+        return "op" if task in graph.nodes else "comm"
+
+    def push_event(t: float, payload: Tuple):
+        nonlocal seq
+        heapq.heappush(events, (t, seq, payload))
+        seq += 1
+
+    def push_ready(rid: int, task: int, t: float):
+        res = resource[task]
+        if res == ("local",) or dur[task] == 0.0:
+            push_event(t, ("task", rid, task))
+            schedule[(rid, task)] = TaskRecord(task, _kind(task), res, t, t)
+            return
+        # earliest-ready-first; ties broken by (request, task) id so that a
+        # single request reproduces `simulate`'s dispatch order exactly
+        heapq.heappush(ready.setdefault(res, []), (t, rid, task))
+        try_start(res, t)
+
+    def try_start(res: Tuple, now: float):
+        if running.get(res) is not None:
+            return
+        q = ready.get(res)
+        if not q:
+            return
+        rt, rid, task = heapq.heappop(q)
+        start = max(rt, free_at.get(res, 0.0), now)
+        end = start + dur[task]
+        running[res] = (rid, task)
+        schedule[(rid, task)] = TaskRecord(task, _kind(task), res, start, end)
+        push_event(end, ("task", rid, task))
+
+    for rid in range(n_requests):
+        for task, d in deps.items():
+            n_deps[(rid, task)] = len(d)
+
+    slots = max_in_flight if max_in_flight is not None else n_requests
+    if slots < 1:
+        raise ValueError("max_in_flight must be >= 1")
+    next_admit = min(slots, n_requests)
+    for rid in range(next_admit):
+        push_event(arrivals[rid], ("admit", rid))
+
+    makespan = 0.0
+    while events:
+        t, _, payload = heapq.heappop(events)
+        if payload[0] == "admit":
+            rid = payload[1]
+            for task in roots:
+                push_ready(rid, task, t)
+            continue
+        _, rid, task = payload
+        makespan = max(makespan, t)
+        res = resource[task]
+        if res != ("local",) and dur[task] > 0.0:
+            running[res] = None
+            free_at[res] = t
+        remaining[rid] -= 1
+        if remaining[rid] == 0:
+            completions[rid] = t
+            completed_requests += 1
+            if next_admit < n_requests:
+                push_event(max(t, arrivals[next_admit]), ("admit", next_admit))
+                next_admit += 1
+        for dep in fanout.get(task, []):
+            n_deps[(rid, dep)] -= 1
+            if n_deps[(rid, dep)] == 0:
+                push_ready(rid, dep, t)
+        if res != ("local",) and dur[task] > 0.0:
+            try_start(res, t)
+
+    if completed_requests != n_requests:
+        unfinished = [r for r, n in remaining.items() if n]
+        raise RuntimeError(
+            f"pipeline simulation deadlock; unfinished requests: {unfinished[:10]}"
+        )
+
+    return PipelineResult(
+        n_requests=n_requests,
+        makespan=makespan,
+        arrivals=arrivals,
+        completions=completions,
+        schedule=schedule,
+        aug=aug,
+    )
+
+
+def validate_pipeline_schedule(
+    graph: OpGraph,
+    placement: Mapping[int, int],
+    cost: CostModel,
+    result: PipelineResult,
+    *,
+    atol: float = 1e-9,
+) -> None:
+    """Every MILP constraint family, extended across requests: per-request
+    precedence through comm nodes, zero-cost co-located flows, and
+    non-overlap per shared resource over ALL requests' tasks."""
+    sched = result.schedule
+    aug = result.aug
+
+    for rid in range(result.n_requests):
+        for (u, v), q in aug.edge_to_comm.items():
+            assert sched[(rid, u)].end <= sched[(rid, q)].start + atol
+            assert sched[(rid, q)].end <= sched[(rid, v)].start + atol
+        for q, c in aug.comm.items():
+            if placement[c.src] == placement[c.dst]:
+                assert sched[(rid, q)].end - sched[(rid, q)].start <= atol
+
+    for nid in graph.nodes:
+        assert 0 <= placement[nid] < cost.cluster.k
+    assert cost.memory_ok(graph, placement), "memory constraint violated"
+
+    by_res: Dict[Tuple, List[TaskRecord]] = {}
+    for r in sched.values():
+        if r.resource != ("local",) and r.end > r.start:
+            by_res.setdefault(r.resource, []).append(r)
+    for res, recs in by_res.items():
+        recs.sort(key=lambda r: r.start)
+        for a, b in zip(recs, recs[1:]):
+            assert a.end <= b.start + atol, (
+                f"cross-request overlap on {res}: task {a.task_id} "
+                f"[{a.start},{a.end}] vs task {b.task_id} [{b.start},{b.end}]"
+            )
+
+
+def bottleneck_time(
+    graph: OpGraph,
+    placement: Mapping[int, int],
+    cost: CostModel,
+    *,
+    aug: Optional[AugmentedDAG] = None,
+) -> float:
+    """Per-request busy time of the most loaded resource (device or channel).
+
+    This is the steady-state completion interval of a saturated pipeline —
+    requests/sec → 1 / bottleneck_time — and the objective minimized by
+    ``plan(..., objective="throughput")``.  It deliberately ignores the
+    critical-path length (pipeline fill), which only affects latency."""
+    aug = aug or augment(graph)
+    busy: Dict[Tuple, float] = {}
+    for nid, node in graph.nodes.items():
+        k = placement[nid]
+        key = ("dev", k)
+        busy[key] = busy.get(key, 0.0) + cost.compute_time(node, k)
+    for q, c in aug.comm.items():
+        ks, kd = placement[c.src], placement[c.dst]
+        if ks != kd:
+            key = ("chan", ks, kd)
+            busy[key] = busy.get(key, 0.0) + cost.comm_time(c.bytes, ks, kd)
+    return max(busy.values()) if busy else 0.0
 
 
 def evaluate(

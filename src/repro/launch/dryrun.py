@@ -35,7 +35,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs import ARCHS, SHAPES, get_config, get_shape, shape_applicable
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.launch.mesh import make_production_mesh
-from repro.launch.roofline import collective_bytes_from_hlo, roofline_terms
+from repro.launch.roofline import (
+    collective_bytes_from_hlo,
+    cost_analysis_dict,
+    roofline_terms,
+)
 from repro.models.model import active_param_count, build_model, param_count_shape
 from repro.parallel.context import ParallelContext, parallel_context
 from repro.parallel.sharding import (
@@ -207,13 +211,13 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, verbose: bool = Tru
         compiled = lowered.compile()
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled.cost_analysis())
     hlo = compiled.as_text()
     coll = collective_bytes_from_hlo(hlo)
     n_dev = mesh.size
 
-    flops = float(cost.get("flops", 0.0)) if cost else 0.0
-    bytes_acc = float(cost.get("bytes accessed", 0.0)) if cost else 0.0
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
     result = {
         "arch": arch,
         "shape": shape_name,

@@ -43,7 +43,11 @@ from repro.launch.dryrun import (
     make_context,
 )
 from repro.launch.mesh import make_production_mesh
-from repro.launch.roofline import collective_bytes_from_hlo, roofline_terms
+from repro.launch.roofline import (
+    collective_bytes_from_hlo,
+    cost_analysis_dict,
+    roofline_terms,
+)
 from repro.models.model import active_param_count, build_model, param_count_shape
 from repro.parallel.context import parallel_context
 from repro.parallel.sharding import (
@@ -60,7 +64,7 @@ ARTIFACTS = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "
 
 def _measure(lowered):
     compiled = lowered.compile()
-    cost = compiled.cost_analysis() or {}
+    cost = cost_analysis_dict(compiled.cost_analysis())
     coll = collective_bytes_from_hlo(compiled.as_text())
     return {
         "flops": float(cost.get("flops", 0.0)),

@@ -3,10 +3,17 @@
 * fixed decode slots (classic continuous batching: a finished sequence frees
   its slot for the next queued request; prefill happens into the slot),
 * Moirai placement computed once at startup from the layer-level OpGraph and
-  the cluster spec (and re-computed by ``on_device_failure`` — elastic),
-* per-stage latency tracking feeds the straggler monitor: a stage whose p95
-  drifts beyond ``straggler_factor``× the median of the others is flagged
-  and (policy) triggers re-planning with that device derated.
+  the cluster spec (and re-computed by ``on_device_failure`` — elastic).
+  With more than one decode slot the engine serves a *pipeline* of requests,
+  so the default planning objective switches from single-query makespan to
+  bottleneck-stage time (``PlanConfig.objective="throughput"``) — the
+  steady-state completion interval of the pipelined schedule,
+* per-stage latency tracking feeds the straggler monitor: observed stage
+  times are compared against the cost-model *predictions* for the planned
+  placement; a stage running ``straggler_factor``× slower than its
+  prediction (normalized by the leave-one-out median of the other stages'
+  observed/predicted ratios, so absolute cost-model error cancels) is
+  flagged and (policy) triggers re-planning with that device derated.
 """
 
 from __future__ import annotations
@@ -24,7 +31,7 @@ from repro.core.costmodel import CostModel
 from repro.core.devices import ClusterSpec
 from repro.core.modelgraph import transformer_graph
 from repro.core.placement import PlanConfig, plan, replan
-from .stage_executor import StageExecutor, stages_from_placement
+from .stage_executor import StageExecutor, stages_from_placement, stats_from_times
 
 
 @dataclass
@@ -58,9 +65,16 @@ class ServingEngine:
         self.max_len = max_len
         self.eos_id = eos_id
         self.straggler_factor = straggler_factor
-        self.plan_cfg = plan_cfg or PlanConfig(method="moirai", time_limit=20.0)
+        # serving >1 slot is a pipelined workload: optimize steady-state
+        # throughput (bottleneck-stage time), not single-query makespan
+        self.plan_cfg = plan_cfg or PlanConfig(
+            method="moirai",
+            time_limit=20.0,
+            objective="throughput" if slots > 1 else "latency",
+        )
 
         self.graph = transformer_graph(cfg, seq_len=max_len, granularity="block")
+        self._cost = CostModel(cluster)
         self.placement_result = plan(self.graph, cluster, self.plan_cfg)
         self._build_executor(self.placement_result.placement)
 
@@ -69,6 +83,7 @@ class ServingEngine:
         self.slot_pos = np.zeros(slots, dtype=np.int64)
         self.caches = None
         self.failed_devices: List[int] = []
+        self._devices_all: Optional[List[Any]] = None  # pre-failure jax devices
 
     # ------------------------------------------------------------------
     def _build_executor(self, placement: Dict[int, int]):
@@ -77,6 +92,7 @@ class ServingEngine:
         )
         self.executor = StageExecutor(self.cfg, self.params, stages)
         self.caches = None  # caches are invalid after a topology change
+        self._pred_stage_s = self._predict_stage_times()
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
@@ -155,26 +171,103 @@ class ServingEngine:
     # ------------------------------------------------------------------
     def on_device_failure(self, device_idx: int):
         """Re-plan on the surviving devices and rebuild stages (weights
-        migrate; in-flight sequences must be re-prefilled by the caller)."""
-        self.failed_devices.append(device_idx)
-        res = replan(self.graph, self.cluster, device_idx, self.plan_cfg)
-        self.placement_result = res
-        surviving = [d for i, d in enumerate(self.devices) if i != device_idx]
-        self.devices = surviving
-        # replan returns original-cluster indices; compact to surviving list
-        alive = sorted({k for k in res.placement.values()})
-        remap = {k: i for i, k in enumerate(alive)}
-        placement = {n: remap[k] for n, k in res.placement.items()}
-        self._build_executor(placement)
+        migrate; in-flight sequences must be re-prefilled by the caller).
 
-    def straggler_report(self) -> Dict[str, Any]:
-        stats = self.executor.stage_latency_stats()
-        p95s = [s["p95"] for s in stats if s["n"] > 0]
-        if not p95s:
-            return {"stages": stats, "stragglers": []}
-        med = float(np.median(p95s))
-        stragglers = [
-            i for i, s in enumerate(stats)
-            if s["n"] > 3 and med > 0 and s["p95"] > self.straggler_factor * med
+        ``device_idx`` is an ORIGINAL cluster index; repeated failures
+        accumulate — the re-plan always excludes every failed device, and
+        ``placement_result`` stays in original indices so the startup cost
+        model (and stage predictions) remain valid."""
+        if device_idx in self.failed_devices or not 0 <= device_idx < self.cluster.k:
+            raise ValueError(f"bad or already-failed device {device_idx}")
+        self.failed_devices.append(device_idx)
+        res = replan(self.graph, self.cluster, self.failed_devices, self.plan_cfg)
+        self.placement_result = res
+        alive = [i for i in range(self.cluster.k) if i not in self.failed_devices]
+        # executor works over a compacted device list aligned with `alive`
+        if self._devices_all is None:
+            self._devices_all = list(self.devices)
+        self.devices = [
+            self._devices_all[i % len(self._devices_all)] for i in alive
         ]
-        return {"stages": stats, "median_p95": med, "stragglers": stragglers}
+        remap = {orig: j for j, orig in enumerate(alive)}
+        self._build_executor({n: remap[k] for n, k in res.placement.items()})
+
+    def _predict_stage_times(self) -> List[float]:
+        """Simulator-predicted per-stage seconds for the current placement.
+
+        Sum of cost-model compute times of each stage's graph nodes on their
+        planned Moirai devices, plus the inter-stage activation transfer into
+        the stage.  Placement indices are ORIGINAL cluster indices (kept so
+        by on_device_failure), so the startup CostModel stays valid after
+        any number of failures."""
+        pl = self.placement_result.placement
+        preds: List[float] = []
+        prev_last: Optional[int] = None
+        for st in self.executor.stages:
+            t = sum(
+                self._cost.compute_time(self.graph.nodes[n], pl[n])
+                for n in st.node_ids
+            )
+            if prev_last is not None and st.node_ids:
+                t += self._cost.comm_time(
+                    self.graph.nodes[prev_last].output_bytes,
+                    pl[prev_last],
+                    pl[st.node_ids[0]],
+                )
+            if st.node_ids:
+                prev_last = st.node_ids[-1]
+            preds.append(t)
+        return preds
+
+    def straggler_report(
+        self, observed: Optional[List[List[float]]] = None
+    ) -> Dict[str, Any]:
+        """Compare observed stage times against simulator predictions.
+
+        A stage is a straggler when its observed p95 exceeds
+        ``straggler_factor`` × its *expected* p95, where expected = predicted
+        stage time × the median of the OTHER stages' observed/predicted
+        ratios (leave-one-out: the fleet baseline absorbs the cost model's
+        absolute scale error without letting a straggler inflate its own
+        baseline — with a plain median a 2-stage pipeline could never flag).
+        What is flagged is a stage slow RELATIVE to what the placement says
+        it should cost — a stage that legitimately owns more layers is not.
+
+        ``observed`` (per-stage lists of seconds) overrides the executor's
+        recorded latencies — used by tests and by external monitors."""
+        if observed is None:
+            stats = self.executor.stage_latency_stats()
+        else:
+            stats = [stats_from_times(times) for times in observed]
+        preds = self._pred_stage_s
+        for i, s in enumerate(stats):
+            # observed may outnumber predictions (e.g. a monitor still holding
+            # samples from a pre-failure topology) — those stages get no ratio
+            pred = preds[i] if i < len(preds) else 0.0
+            s["predicted_s"] = pred
+            if s["n"] > 0 and pred > 0:
+                s["obs_over_pred"] = s["p95"] / pred
+            else:
+                s["obs_over_pred"] = float("nan")
+        finite = {
+            i: s["obs_over_pred"]
+            for i, s in enumerate(stats)
+            if np.isfinite(s["obs_over_pred"])
+        }
+        p95s = [s["p95"] for s in stats if s["n"] > 0]
+        stragglers = []
+        for i, s in enumerate(stats):
+            if s["n"] <= 3 or not np.isfinite(s["obs_over_pred"]):
+                continue
+            others = [r for j, r in finite.items() if j != i]
+            baseline = float(np.median(others)) if others else s["obs_over_pred"]
+            if baseline > 0 and s["obs_over_pred"] > self.straggler_factor * baseline:
+                stragglers.append(i)
+        return {
+            "stages": stats,
+            "median_p95": float(np.median(p95s)) if p95s else float("nan"),
+            "median_ratio": (
+                float(np.median(list(finite.values()))) if finite else float("nan")
+            ),
+            "stragglers": stragglers,
+        }

@@ -37,6 +37,7 @@ class Stage:
     layer_ids: List[int]             # model layer indices (contiguous)
     first: bool = False              # owns embedding
     last: bool = False               # owns final norm + lm head
+    node_ids: List[int] = field(default_factory=list)  # OpGraph nodes in this stage
 
 
 def stages_from_placement(
@@ -57,18 +58,20 @@ def stages_from_placement(
     for pos, nid in enumerate(order):
         dev = devices[placement[nid] % len(devices)]
         if pos == 0:
-            stages.append(Stage(device=dev, layer_ids=[], first=True))
+            stages.append(Stage(device=dev, layer_ids=[], first=True, node_ids=[nid]))
             continue
         layer_idx = pos - 1
         if pos == len(order) - 1:
             if stages[-1].device is not dev:
                 stages.append(Stage(device=dev, layer_ids=[]))
             stages[-1].last = True
+            stages[-1].node_ids.append(nid)
             continue
         if stages[-1].device is dev:
             stages[-1].layer_ids.append(layer_idx)
         else:
             stages.append(Stage(device=dev, layer_ids=[layer_idx]))
+        stages[-1].node_ids.append(nid)
     return stages
 
 
@@ -187,17 +190,19 @@ class StageExecutor:
 
     # stage latency stats (straggler detection feed)
     def stage_latency_stats(self) -> List[Dict[str, float]]:
-        import numpy as np
+        return [stats_from_times(times) for times in self._stage_times]
 
-        out = []
-        for times in self._stage_times:
-            if times:
-                arr = np.asarray(times)
-                out.append({
-                    "mean": float(arr.mean()),
-                    "p95": float(np.percentile(arr, 95)),
-                    "n": len(times),
-                })
-            else:
-                out.append({"mean": 0.0, "p95": 0.0, "n": 0})
-        return out
+
+def stats_from_times(times: Sequence[float]) -> Dict[str, float]:
+    """mean/p95/n summary of one stage's observed latencies; the single
+    aggregation used for executor-recorded and externally-injected samples."""
+    import numpy as np
+
+    if not times:
+        return {"mean": 0.0, "p95": 0.0, "n": 0}
+    arr = np.asarray(times, dtype=np.float64)
+    return {
+        "mean": float(arr.mean()),
+        "p95": float(np.percentile(arr, 95)),
+        "n": len(times),
+    }

@@ -11,6 +11,9 @@ from repro.models.model import build_model, cross_entropy_loss, param_count
 from repro.train.optimizer import AdamWConfig, init_opt_state
 from repro.train.step import make_train_step
 
+# ~70 s of jit compiles across 10 architectures; out of the fast tier
+pytestmark = pytest.mark.slow
+
 B, S = 2, 32
 
 

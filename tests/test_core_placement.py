@@ -1,9 +1,8 @@
 """Cluster model, cost model, simulator, MILP, heuristics — the paper's core."""
 
-import hypothesis
-import hypothesis.strategies as st
 import numpy as np
 import pytest
+from _hypothesis_compat import hypothesis, st
 
 from repro.core.costmodel import CostModel
 from repro.core.devices import (
@@ -86,6 +85,7 @@ def small_case(n=10, seed=0):
     return g, cl, CostModel(cl)
 
 
+@pytest.mark.slow
 def test_milp_beats_or_matches_heuristics():
     g, cl, cm = small_case(12, seed=4)
     res = solve_placement(g, cm, time_limit=30, mip_rel_gap=0.01)
@@ -96,6 +96,7 @@ def test_milp_beats_or_matches_heuristics():
         assert mk_milp <= mk_h * 1.05, (mk_milp, mk_h, h.__name__)
 
 
+@pytest.mark.slow
 def test_milp_schedule_satisfies_own_constraints():
     g, cl, cm = small_case(10, seed=7)
     res = solve_placement(g, cm, time_limit=30)
@@ -161,6 +162,7 @@ def test_cluster_graph_is_dag_and_partitions(n, seed, cap):
 
 
 # -------------------------------------------------------------- public API
+@pytest.mark.slow
 def test_plan_all_methods_and_replan():
     g = random_dag(18, seed=2)
     cl = inter_server_cluster()
@@ -172,6 +174,7 @@ def test_plan_all_methods_and_replan():
     assert set(res.placement) == set(g.nodes)
 
 
+@pytest.mark.slow
 def test_plan_coarsened_vs_original():
     """RQ2: Moirai on the coarsened graph is not worse than on the original
     (paper: coarsening changes end-to-end latency ≤ ~6%), and is faster to

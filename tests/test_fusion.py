@@ -1,8 +1,7 @@
 """GCOF (Algorithm 1) unit + property tests."""
 
-import hypothesis
-import hypothesis.strategies as st
 import pytest
+from _hypothesis_compat import hypothesis, st
 
 from repro.core.fusion import DEFAULT_RULES, EIGEN_RULES, RuleIndex, gcof, runtime_fuse
 from repro.core.graph import OpGraph, chain_graph, random_dag

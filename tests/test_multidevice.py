@@ -10,6 +10,10 @@ from pathlib import Path
 
 import pytest
 
+# each test spawns a fresh interpreter and compiles on a forced multi-device
+# mesh — minutes of wall clock; the fast tier runs with -m "not slow"
+pytestmark = pytest.mark.slow
+
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
 

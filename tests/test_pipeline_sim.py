@@ -1,0 +1,213 @@
+"""Pipelined multi-request simulator + throughput objective (core.simulate).
+
+Property tests use the real `hypothesis` when installed and fall back to the
+deterministic shim in _hypothesis_compat otherwise.
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import hypothesis, st
+
+from repro.configs import ARCHS, get_config
+from repro.core.costmodel import CostModel
+from repro.core.devices import (
+    ClusterSpec,
+    inter_server_cluster,
+    tpu_slice_cluster,
+)
+from repro.core.graph import chain_graph, random_dag
+from repro.core.heuristics import bottleneck_balance
+from repro.core.modelgraph import transformer_graph
+from repro.core.placement import PlanConfig, plan
+from repro.core.simulate import (
+    bottleneck_time,
+    simulate,
+    simulate_pipeline,
+    validate_pipeline_schedule,
+)
+
+
+def _random_placement(g, k, seed=0):
+    rng = np.random.default_rng(seed)
+    return {nid: int(rng.integers(0, k)) for nid in g.nodes}
+
+
+# ------------------------------------------------- n=1 reduces to simulate
+@hypothesis.settings(max_examples=20, deadline=None)
+@hypothesis.given(n=st.integers(4, 50), seed=st.integers(0, 9999))
+def test_single_request_equals_simulate(n, seed):
+    g = random_dag(n, seed=seed)
+    cl = inter_server_cluster()
+    cm = CostModel(cl)
+    pl = _random_placement(g, cl.k, seed)
+    mk = simulate(g, pl, cm).makespan
+    pr = simulate_pipeline(g, pl, cm, 1)
+    assert pr.makespan == mk  # bit-exact: same dispatch order, same sums
+    assert pr.throughput == pytest.approx(1.0 / mk)
+    assert pr.latencies == [mk]
+
+
+def test_single_request_equals_simulate_on_every_arch_config():
+    """Acceptance: exact equality on the block graph of EVERY registered
+    config in src/repro/configs/, on a heterogeneous cluster."""
+    cl = tpu_slice_cluster(n_slices=4, heterogeneous=True)
+    cm = CostModel(cl)
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        g = transformer_graph(cfg, seq_len=128, granularity="block")
+        pl = {nid: i % cl.k for i, nid in enumerate(g.topo_order())}
+        mk = simulate(g, pl, cm).makespan
+        pr = simulate_pipeline(g, pl, cm, 1)
+        assert pr.makespan == mk, arch
+        if cm.memory_ok(g, pl):  # the largest archs overflow 4 slices
+            validate_pipeline_schedule(g, pl, cm, pr)
+
+
+# --------------------------------------------- schedules obey constraints
+@hypothesis.settings(max_examples=15, deadline=None)
+@hypothesis.given(
+    n=st.integers(4, 40),
+    seed=st.integers(0, 999),
+    n_req=st.integers(2, 6),
+    slots=st.integers(1, 4),
+)
+def test_pipeline_schedules_are_valid(n, seed, n_req, slots):
+    g = random_dag(n, seed=seed)
+    cl = inter_server_cluster()
+    cm = CostModel(cl)
+    pl = _random_placement(g, cl.k, seed)
+    pr = simulate_pipeline(g, pl, cm, n_req, max_in_flight=slots)
+    validate_pipeline_schedule(g, pl, cm, pr)
+    # whole-window throughput can never beat the bottleneck resource
+    assert pr.throughput <= 1.0 / bottleneck_time(g, pl, cm) + 1e-9
+    # completions are causal: every request finishes after it arrives
+    assert all(c >= a for a, c in zip(pr.arrivals, pr.completions))
+
+
+def test_serialized_pipeline_is_n_times_single_request():
+    """max_in_flight=1 degenerates to back-to-back single queries."""
+    g = chain_graph(["matmul"] * 5, flops=1e9, output_bytes=1e6)
+    cl = inter_server_cluster()
+    cm = CostModel(cl)
+    pl = {nid: nid % cl.k for nid in g.nodes}
+    mk1 = simulate(g, pl, cm).makespan
+    pr = simulate_pipeline(g, pl, cm, 4, max_in_flight=1)
+    assert pr.makespan == pytest.approx(4 * mk1, rel=1e-12)
+    # lifting the cap lets requests overlap on distinct devices
+    assert simulate_pipeline(g, pl, cm, 4).makespan < pr.makespan
+
+
+def test_arrival_modes():
+    g = chain_graph(["matmul"] * 3, flops=1e9, output_bytes=1e4)
+    cl = inter_server_cluster()
+    cm = CostModel(cl)
+    pl = {nid: 0 for nid in g.nodes}
+    mk1 = simulate(g, pl, cm).makespan
+    # a gap larger than the service time → no queueing, latency == makespan
+    pr = simulate_pipeline(g, pl, cm, 3, arrival=2 * mk1)
+    assert all(lat == pytest.approx(mk1, rel=1e-9) for lat in pr.latencies)
+    # explicit arrival sequence
+    pr2 = simulate_pipeline(g, pl, cm, 2, arrival=[0.0, 5 * mk1])
+    assert pr2.completions[1] == pytest.approx(6 * mk1, rel=1e-9)
+    with pytest.raises(ValueError):
+        simulate_pipeline(g, pl, cm, 3, arrival=[0.0, 1.0])  # wrong length
+    with pytest.raises(ValueError):
+        simulate_pipeline(g, pl, cm, 2, arrival=[1.0, 0.0])  # decreasing
+
+
+# --------------------------------------- throughput vs bandwidth monotone
+def _scaled_bw(cluster: ClusterSpec, f: float) -> ClusterSpec:
+    return ClusterSpec(
+        devices=cluster.devices,
+        link_bw=cluster.link_bw * f,
+        link_latency=cluster.link_latency.copy(),
+        name=f"{cluster.name}*{f}",
+    )
+
+
+@hypothesis.settings(max_examples=10, deadline=None)
+@hypothesis.given(n=st.integers(3, 12), seed=st.integers(0, 999))
+def test_throughput_monotone_in_bandwidth(n, seed):
+    """Dropping every link bandwidth never raises pipeline throughput.
+
+    Stated on chain graphs (the serving stage shape): greedy list scheduling
+    on general DAGs admits Graham anomalies where longer tasks can reorder
+    dispatch, so strict monotonicity is only guaranteed without branching."""
+    g = chain_graph(["matmul"] * n, flops=1e9, output_bytes=1e6)
+    base = inter_server_cluster()
+    rng = np.random.default_rng(seed)
+    pl = {nid: int(rng.integers(0, base.k)) for nid in g.nodes}
+    last = float("inf")
+    for f in (1.0, 0.5, 0.2, 0.05):
+        cm = CostModel(_scaled_bw(base, f))
+        thr = simulate_pipeline(g, pl, cm, 5).throughput
+        assert thr <= last + 1e-9, (f, thr, last)
+        last = thr
+
+
+# ------------------------------------------------- throughput objective
+def test_bottleneck_time_matches_busy_sums():
+    g = chain_graph(["matmul"] * 4, flops=1e9, output_bytes=1e6)
+    cl = inter_server_cluster()
+    cm = CostModel(cl)
+    # all on device 0: bottleneck is the serial compute sum, no channels
+    pl0 = {nid: 0 for nid in g.nodes}
+    serial = sum(cm.compute_time(nd, 0) for nd in g.nodes.values())
+    assert bottleneck_time(g, pl0, cm) == pytest.approx(serial, rel=1e-12)
+    # split: bottleneck is the max of the two device sums and the channel
+    pl = {nid: (0 if i < 2 else 1) for i, nid in enumerate(g.topo_order())}
+    per_dev = [
+        sum(cm.compute_time(g.nodes[nid], k) for nid in g.nodes if pl[nid] == k)
+        for k in (0, 1)
+    ]
+    chan = cm.comm_time(1e6, 0, 1)
+    assert bottleneck_time(g, pl, cm) == pytest.approx(max(*per_dev, chan))
+
+
+@hypothesis.settings(max_examples=10, deadline=None)
+@hypothesis.given(n=st.integers(6, 40), seed=st.integers(0, 999))
+def test_bottleneck_balance_valid_and_no_worse_than_etf(n, seed):
+    from repro.core.heuristics import etf
+
+    g = random_dag(n, seed=seed)
+    cm = CostModel(tpu_slice_cluster(n_slices=4, heterogeneous=True))
+    res = bottleneck_balance(g, cm)
+    assert set(res.placement) == set(g.nodes)
+    assert all(0 <= d < cm.cluster.k for d in res.placement.values())
+    b_bb = bottleneck_time(g, res.placement, cm)
+    b_etf = bottleneck_time(g, etf(g, cm).placement, cm)
+    # the bottleneck scheduler optimizes exactly this metric greedily
+    assert b_bb <= b_etf * 1.25, (b_bb, b_etf)
+
+
+def test_plan_throughput_objective_beats_latency_on_hetero_cluster():
+    """Acceptance: >=1.1x requests/sec from the throughput objective under
+    pipelined load on a heterogeneous cluster."""
+    cfg = get_config("llama3.2-1b")
+    g = transformer_graph(cfg, seq_len=2048, granularity="block")
+    cl = tpu_slice_cluster(n_slices=4, heterogeneous=True)
+    cm = CostModel(cl)
+    r_lat = plan(g, cl, method="moirai", time_limit=10, mip_rel_gap=0.05)
+    r_thr = plan(
+        g, cl, method="moirai", objective="throughput",
+        time_limit=10, mip_rel_gap=0.05,
+    )
+    assert r_thr.extra["objective"] == "throughput"
+    slots = 4
+    rps_lat = simulate_pipeline(g, r_lat.placement, cm, 16, max_in_flight=slots).throughput
+    rps_thr = simulate_pipeline(g, r_thr.placement, cm, 16, max_in_flight=slots).throughput
+    assert rps_thr >= 1.1 * rps_lat, (rps_thr, rps_lat)
+
+
+def test_plan_rejects_unknown_objective():
+    g = chain_graph(["matmul"] * 3, flops=1e9)
+    with pytest.raises(ValueError):
+        plan(g, inter_server_cluster(), PlanConfig(objective="goodput"))
+
+
+def test_plan_bottleneck_balance_method():
+    g = random_dag(15, seed=3)
+    cl = inter_server_cluster()
+    res = plan(g, cl, method="bottleneck_balance")
+    assert set(res.placement) == set(g.nodes)
+    assert res.method.startswith("bottleneck")

@@ -96,6 +96,91 @@ def test_straggler_report_shape(small_model):
     assert "stages" in rep and isinstance(rep["stragglers"], list)
 
 
+def test_engine_objective_defaults_follow_slots(small_model):
+    """slots>1 serves a pipeline → plan for throughput; slots=1 → latency."""
+    cfg, model, params = small_model
+    cluster = tpu_slice_cluster(n_slices=2, heterogeneous=True)
+    eng = ServingEngine(cfg, params, cluster, slots=4, max_len=64, eos_id=-1)
+    assert eng.plan_cfg.objective == "throughput"
+    assert eng.placement_result.extra["objective"] == "throughput"
+    eng1 = ServingEngine(cfg, params, cluster, slots=1, max_len=64, eos_id=-1)
+    assert eng1.plan_cfg.objective == "latency"
+    # the throughput-planned engine still serves correctly
+    req = Request(rid=0, prompt=[1, 2, 3], max_new_tokens=3)
+    eng.submit(req)
+    eng.run_until_drained()
+    assert req.done and len(req.out_tokens) == 3
+
+
+def test_engine_failure_replans_with_throughput_objective(small_model):
+    cfg, model, params = small_model
+    cluster = tpu_slice_cluster(n_slices=3, heterogeneous=True)
+    eng = ServingEngine(cfg, params, cluster, slots=2, max_len=64, eos_id=-1)
+    assert eng.plan_cfg.objective == "throughput"
+    eng.on_device_failure(1)
+    assert eng.failed_devices == [1]
+    assert 1 not in set(eng.placement_result.placement.values())
+    assert eng.placement_result.extra["objective"] == "throughput"
+    # predictions were rebuilt for the new stage split
+    assert len(eng._pred_stage_s) == len(eng.executor.stages)
+    req = Request(rid=0, prompt=[4, 5], max_new_tokens=2)
+    eng.submit(req)
+    eng.run_until_drained()
+    assert req.done
+    # a SECOND failure must exclude BOTH failed devices (original indices)
+    eng.on_device_failure(2)
+    assert eng.failed_devices == [1, 2]
+    assert set(eng.placement_result.placement.values()) == {0}
+    with pytest.raises(ValueError):
+        eng.on_device_failure(2)  # already failed
+    req2 = Request(rid=1, prompt=[6], max_new_tokens=2)
+    eng.submit(req2)
+    eng.run_until_drained()
+    assert req2.done
+
+
+def test_straggler_report_compares_against_predictions(small_model):
+    """Deterministic: inject observed stage latencies and predictions."""
+    cfg, model, params = small_model
+    cluster = tpu_slice_cluster(n_slices=1)
+    eng = ServingEngine(cfg, params, cluster, slots=1, max_len=64,
+                        plan_cfg=PlanConfig(method="etf"), eos_id=-1,
+                        straggler_factor=4.0)
+    # pretend the placement split into 3 stages with known predicted costs
+    eng._pred_stage_s = [1e-3, 1e-3, 2e-3]
+    observed = [[1.0e-3] * 5, [9.0e-3] * 5, [2.0e-3] * 5]
+    rep = eng.straggler_report(observed=observed)
+    # ratios = [1, 9, 1] → median 1 → only stage 1 exceeds 4× expectation
+    assert rep["stragglers"] == [1]
+    assert rep["median_ratio"] == pytest.approx(1.0)
+    assert rep["stages"][1]["obs_over_pred"] == pytest.approx(9.0)
+    assert rep["stages"][2]["predicted_s"] == pytest.approx(2e-3)
+    # proportionally slow stages are NOT stragglers: a stage predicted 2×
+    # slower may run 2× slower without being flagged
+    rep2 = eng.straggler_report(
+        observed=[[2.0e-3] * 5, [2.0e-3] * 5, [4.0e-3] * 5]
+    )
+    assert rep2["stragglers"] == []
+    # under-sampled stages (n <= 3) are never flagged
+    rep3 = eng.straggler_report(observed=[[1e-3] * 5, [99.0] * 2, [2e-3] * 5])
+    assert rep3["stragglers"] == []
+    # more observed stages than predictions (stale monitor after a replan
+    # shrank the stage count): extra stages get nan ratios, never flagged
+    eng._pred_stage_s = [1e-3]
+    rep4 = eng.straggler_report(observed=[[1e-3] * 5, [99.0] * 5])
+    assert rep4["stragglers"] == []
+    assert np.isnan(rep4["stages"][1]["obs_over_pred"])
+    # 2-stage pipelines CAN flag (leave-one-out baseline — a plain median
+    # would include the straggler's own ratio and never trigger)
+    eng._pred_stage_s = [1e-3, 1e-3]
+    rep5 = eng.straggler_report(observed=[[1e-3] * 5, [1e-2] * 5])
+    assert rep5["stragglers"] == [1]
+    # report shape is stable even with zero traffic
+    rep6 = eng.straggler_report(observed=[[], []])
+    assert rep6["stragglers"] == []
+    assert np.isnan(rep6["median_ratio"]) and np.isnan(rep6["median_p95"])
+
+
 def test_serving_placement_simulated_latency_ranks_methods():
     """Moirai's simulated serving makespan ≤ round-robin's on a hetero cluster."""
     from repro.core.costmodel import CostModel
