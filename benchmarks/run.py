@@ -16,7 +16,7 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true", help="small model grid")
     ap.add_argument(
         "--sections",
-        default="table_iv,fig4,fig10,table_v,roofline,bw_sens,throughput",
+        default="table_iv,fig4,fig10,table_v,roofline,bw_sens,throughput,milp_throughput",
     )
     args = ap.parse_args()
 
@@ -53,6 +53,10 @@ def main() -> None:
         from . import throughput_sweep
 
         throughput_sweep.run(csv, time_limit=time_limit)
+    if "milp_throughput" in sections:
+        from . import milp_throughput
+
+        milp_throughput.run(csv, time_limit=time_limit)
 
     print("\n# CSV (name,us_per_call,derived)")
     for line in csv:

@@ -105,17 +105,38 @@ class CostModel:
         return out
 
     # ---------------------------------------------------------- memory fit
-    def memory_ok(self, graph: OpGraph, placement: Mapping[int, int]) -> bool:
-        usage = np.zeros(self.cluster.k)
-        for nid, dev in placement.items():
-            usage[dev] += graph.nodes[nid].param_bytes
+    def kv_bytes(self, node: OpNode) -> float:
+        """Per-request resident KV-cache bytes of ``node`` (0 for stateless ops)."""
+        return node.kv_bytes
+
+    def resident_bytes(self, node: OpNode, serving_slots: int = 1) -> float:
+        """Eq. 5 resident cost of hosting ``node``: weights plus one KV-cache
+        copy per concurrently served request (serving slot).  With
+        ``serving_slots=1`` this is the paper's single-query memory model plus
+        the one in-flight request's cache."""
+        return node.param_bytes + max(serving_slots, 1) * node.kv_bytes
+
+    def memory_ok(
+        self,
+        graph: OpGraph,
+        placement: Mapping[int, int],
+        *,
+        serving_slots: int = 1,
+    ) -> bool:
+        usage = self.memory_usage(graph, placement, serving_slots=serving_slots)
         caps = np.array([d.mem_bytes for d in self.cluster.devices])
         return bool(np.all(usage <= caps))
 
-    def memory_usage(self, graph: OpGraph, placement: Mapping[int, int]) -> np.ndarray:
+    def memory_usage(
+        self,
+        graph: OpGraph,
+        placement: Mapping[int, int],
+        *,
+        serving_slots: int = 1,
+    ) -> np.ndarray:
         usage = np.zeros(self.cluster.k)
         for nid, dev in placement.items():
-            usage[dev] += graph.nodes[nid].param_bytes
+            usage[dev] += self.resident_bytes(graph.nodes[nid], serving_slots)
         return usage
 
     # ------------------------------------------------------------ bounds

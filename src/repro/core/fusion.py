@@ -227,6 +227,7 @@ def _materialize(
         members = [graph.nodes[m] for m in g.members]
         flops = sum(m.flops for m in members)
         params = sum(m.param_bytes for m in members)
+        kv = sum(m.kv_bytes for m in members)
         bytes_acc = sum(m.bytes_accessed for m in members)
         # fused-node cost model: drop the internal intermediate write+read —
         # the fusion speedup the paper's coarsening preserves
@@ -239,6 +240,7 @@ def _materialize(
             flops=flops,
             bytes_accessed=bytes_acc,
             param_bytes=params,
+            kv_bytes=kv,
             # every non-tail member's single out-edge is internal, so all
             # external out-edges carry the tail's payload
             output_bytes=tail.output_bytes,

@@ -36,6 +36,8 @@ class OpNode:
     flops: float = 0.0                # forward FLOPs of this op
     bytes_accessed: float = 0.0       # HBM traffic if executed unfused
     param_bytes: float = 0.0          # resident memory (weights)
+    kv_bytes: float = 0.0             # per-request resident state (KV cache);
+                                      # multiplied by serving slots in Eq. 5
     output_bytes: float = 0.0         # payload carried by each outgoing edge
     inputs: List[int] = field(default_factory=list)    # predecessor op ids
     outputs: List[int] = field(default_factory=list)   # successor op ids
@@ -72,6 +74,7 @@ class OpGraph:
         flops: float = 0.0,
         bytes_accessed: float = 0.0,
         param_bytes: float = 0.0,
+        kv_bytes: float = 0.0,
         output_bytes: float = 0.0,
         meta: Optional[dict] = None,
     ) -> int:
@@ -83,6 +86,7 @@ class OpGraph:
             flops=flops,
             bytes_accessed=bytes_accessed,
             param_bytes=param_bytes,
+            kv_bytes=kv_bytes,
             output_bytes=output_bytes,
             inputs=list(inputs),
             meta=meta or {},
@@ -183,6 +187,9 @@ class OpGraph:
 
     def total_param_bytes(self) -> float:
         return sum(n.param_bytes for n in self.nodes.values())
+
+    def total_kv_bytes(self) -> float:
+        return sum(n.kv_bytes for n in self.nodes.values())
 
     def validate(self) -> None:
         """Internal consistency: symmetric adjacency, DAG, ids resolve."""

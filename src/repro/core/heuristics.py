@@ -19,11 +19,18 @@
   busy time over any device or channel — which is the steady-state completion
   interval of a saturated serving pipeline (see core.simulate.bottleneck_time
   and the pipelined partitioning objective of Tarnawski et al.).
-* ``round_robin`` / ``single_device`` — sanity baselines.
+* ``round_robin`` / ``single_device`` — sanity baselines.  Their ``objective``
+  is the simulated makespan of the produced placement (NOT NaN: a NaN
+  objective poisons best-candidate selection because every NaN comparison is
+  False, silently keeping or dropping the candidate by iteration order).
 
 All heuristics return a ``PlacementResult`` whose ``objective`` is their own
 internal schedule estimate; benchmarks re-evaluate every method through the
-same event simulator for fairness.
+same event simulator for fairness.  Every heuristic accepts
+``serving_slots``: memory feasibility charges each op ``param_bytes +
+serving_slots × kv_bytes`` (Eq. 5's KV-aware resident cost), and ``getf``
+additionally accepts ``objective="throughput"`` to run its group-restricted
+search under the bottleneck-stage criterion instead of earliest finish.
 """
 
 from __future__ import annotations
@@ -64,6 +71,7 @@ def _greedy_list_schedule(
     candidate_key=None,
     on_commit=None,
     objective_fn=None,
+    serving_slots: int = 1,
 ) -> PlacementResult:
     """Shared engine for every list scheduler: pick the (ready task, device)
     candidate with the smallest key, respecting memory.
@@ -73,11 +81,15 @@ def _greedy_list_schedule(
     overrides the earliest-finish ordering entirely (bottleneck_balance);
     ``on_commit(nid, k)`` lets the caller maintain its own scoring state;
     ``objective_fn()`` overrides the reported objective (default: makespan
-    of the internal schedule)."""
+    of the internal schedule).  ``serving_slots`` makes the memory check
+    KV-aware (Eq. 5 resident cost)."""
     t0 = _time.perf_counter()
     K = cost.cluster.k
     caps = np.array([d.mem_bytes for d in cost.cluster.devices])
     usage = np.zeros(K)
+
+    def _resident(nid: int) -> float:
+        return cost.resident_bytes(graph.nodes[nid], serving_slots)
 
     indeg = {nid: len(n.inputs) for nid, n in graph.nodes.items()}
     ready: Set[int] = {nid for nid, d in indeg.items() if d == 0}
@@ -95,7 +107,7 @@ def _greedy_list_schedule(
             node = graph.nodes[nid]
             devs = eligible.get(nid, list(range(K))) if eligible else range(K)
             for k in devs:
-                if usage[k] + node.param_bytes > caps[k]:
+                if usage[k] + _resident(nid) > caps[k]:
                     continue
                 s = max(dev_free[k], _comm_ready_time(cost, graph, nid, k, placement, end))
                 f = s + cost.compute_time(node, k)
@@ -122,7 +134,7 @@ def _greedy_list_schedule(
         _, nid, k, s, f = best
         placement[nid] = k
         start[nid], end[nid] = s, f
-        usage[k] += graph.nodes[nid].param_bytes
+        usage[k] += _resident(nid)
         dev_free[k] = f
         last_on_dev[k] = nid
         if on_commit is not None:
@@ -150,61 +162,20 @@ def _greedy_list_schedule(
     )
 
 
-def etf(graph: OpGraph, cost: CostModel) -> PlacementResult:
-    return _greedy_list_schedule(graph, cost, name="etf")
+def _bottleneck_scorer(graph: OpGraph, cost: CostModel):
+    """Shared bottleneck-stage scoring state for throughput-mode schedulers.
 
-
-def getf(graph: OpGraph, cost: CostModel) -> PlacementResult:
-    """GETF: group machines by speed; heavy tasks are restricted to the fast
-    group, light tasks may go anywhere (the work-threshold grouping)."""
-    K = cost.cluster.k
-    speeds = np.array([d.peak_flops for d in cost.cluster.devices])
-    fast = set(np.argsort(-speeds)[: max(1, K // 2)].tolist())
-    flops = np.array([graph.nodes[n].flops for n in graph.nodes])
-    thresh = float(np.quantile(flops, 0.75)) if len(flops) else 0.0
-    eligible = {
-        nid: (sorted(fast) if graph.nodes[nid].flops >= thresh and thresh > 0 else list(range(K)))
-        for nid in graph.nodes
-    }
-    return _greedy_list_schedule(graph, cost, eligible=eligible, name="getf")
-
-
-def msct(graph: OpGraph, cost: CostModel) -> PlacementResult:
-    """m-SCT: favorite child = the most *critical* successor (largest
-    bottom-level, i.e. longest remaining path to a sink) — co-locating it
-    saves its input communication on the critical path, per Hanen–Munier SCT
-    as used in Baechi."""
-    K = cost.cluster.k
-    mean_t = {
-        nid: float(np.mean([cost.compute_time(n, k) for k in range(K)]))
-        for nid, n in graph.nodes.items()
-    }
-    bottom: Dict[int, float] = {}
-    for nid in reversed(graph.topo_order()):
-        node = graph.nodes[nid]
-        bottom[nid] = mean_t[nid] + max((bottom[s] for s in node.outputs), default=0.0)
-    favorite: Dict[int, int] = {}
-    for nid, node in graph.nodes.items():
-        if node.outputs:
-            favorite[nid] = max(node.outputs, key=lambda s: (bottom[s], -s))
-    return _greedy_list_schedule(graph, cost, favorite=favorite, name="m-sct")
-
-
-def bottleneck_balance(graph: OpGraph, cost: CostModel) -> PlacementResult:
-    """Throughput list scheduler: greedily minimize the bottleneck-stage time.
-
-    Tasks are taken in ready order; each is placed on the device whose choice
-    yields the smallest max-loaded resource (device compute busy + directed
-    channel busy, per request), tie-broken by earliest finish (so the
-    schedule stays latency-sane among equal-bottleneck choices).  Runs on the
-    shared list-schedule engine — the memory handling and ready-set logic are
-    the common ones; only the candidate scoring differs."""
+    Returns ``(candidate_key, on_commit, objective_fn)`` closures over mutable
+    per-resource busy accumulators: the key of placing ``nid`` on ``k`` is the
+    resulting max per-request busy time over every device and directed
+    channel (see core.simulate.bottleneck_time), tie-broken by earliest
+    finish."""
     K = cost.cluster.k
     dev_busy = np.zeros(K)                        # per-request compute busy
     chan_busy: Dict[Tuple[int, int], float] = {}  # per-request channel busy
     placed: Dict[int, int] = {}
 
-    def _key(nid: int, k: int, s: float, f: float):
+    def key(nid: int, k: int, s: float, f: float):
         node = graph.nodes[nid]
         peak = dev_busy[k] + cost.compute_time(node, k)
         for j in range(K):
@@ -222,7 +193,7 @@ def bottleneck_balance(graph: OpGraph, cost: CostModel) -> PlacementResult:
             peak = max(peak, t)
         return (peak, f, nid, k)
 
-    def _commit(nid: int, k: int):
+    def commit(nid: int, k: int):
         node = graph.nodes[nid]
         placed[nid] = k
         dev_busy[k] += cost.compute_time(node, k)
@@ -232,36 +203,131 @@ def bottleneck_balance(graph: OpGraph, cost: CostModel) -> PlacementResult:
                 t = cost.comm_time(graph.nodes[p].output_bytes, kp, k)
                 chan_busy[(kp, k)] = chan_busy.get((kp, k), 0.0) + t
 
-    def _objective():
+    def objective():
         # bottleneck-stage time of the final placement, not makespan
         peak = float(dev_busy.max()) if K else 0.0
         return max(peak, max(chan_busy.values())) if chan_busy else peak
 
+    return key, commit, objective
+
+
+def etf(graph: OpGraph, cost: CostModel, *, serving_slots: int = 1) -> PlacementResult:
+    return _greedy_list_schedule(graph, cost, name="etf", serving_slots=serving_slots)
+
+
+def getf(
+    graph: OpGraph,
+    cost: CostModel,
+    *,
+    objective: str = "latency",
+    serving_slots: int = 1,
+) -> PlacementResult:
+    """GETF: group machines by speed; heavy tasks are restricted to the fast
+    group, light tasks may go anywhere (the work-threshold grouping).
+
+    ``objective="throughput"`` keeps the grouping but replaces the
+    earliest-finish candidate rule with the bottleneck-stage criterion, so the
+    baseline optimizes the same quantity as the throughput MILP (fair
+    Fig. 10-style comparison — ROADMAP open item)."""
+    K = cost.cluster.k
+    speeds = np.array([d.peak_flops for d in cost.cluster.devices])
+    fast = set(np.argsort(-speeds)[: max(1, K // 2)].tolist())
+    flops = np.array([graph.nodes[n].flops for n in graph.nodes])
+    thresh = float(np.quantile(flops, 0.75)) if len(flops) else 0.0
+    eligible = {
+        nid: (sorted(fast) if graph.nodes[nid].flops >= thresh and thresh > 0 else list(range(K)))
+        for nid in graph.nodes
+    }
+    if objective == "throughput":
+        key, commit, objective_fn = _bottleneck_scorer(graph, cost)
+        return _greedy_list_schedule(
+            graph, cost, eligible=eligible, name="getf[throughput]",
+            candidate_key=key, on_commit=commit, objective_fn=objective_fn,
+            serving_slots=serving_slots,
+        )
     return _greedy_list_schedule(
-        graph, cost, name="bottleneck-balance",
-        candidate_key=_key, on_commit=_commit, objective_fn=_objective,
+        graph, cost, eligible=eligible, name="getf", serving_slots=serving_slots
     )
 
 
-def round_robin(graph: OpGraph, cost: CostModel) -> PlacementResult:
+def msct(graph: OpGraph, cost: CostModel, *, serving_slots: int = 1) -> PlacementResult:
+    """m-SCT: favorite child = the most *critical* successor (largest
+    bottom-level, i.e. longest remaining path to a sink) — co-locating it
+    saves its input communication on the critical path, per Hanen–Munier SCT
+    as used in Baechi."""
+    K = cost.cluster.k
+    mean_t = {
+        nid: float(np.mean([cost.compute_time(n, k) for k in range(K)]))
+        for nid, n in graph.nodes.items()
+    }
+    bottom: Dict[int, float] = {}
+    for nid in reversed(graph.topo_order()):
+        node = graph.nodes[nid]
+        bottom[nid] = mean_t[nid] + max((bottom[s] for s in node.outputs), default=0.0)
+    favorite: Dict[int, int] = {}
+    for nid, node in graph.nodes.items():
+        if node.outputs:
+            favorite[nid] = max(node.outputs, key=lambda s: (bottom[s], -s))
+    return _greedy_list_schedule(
+        graph, cost, favorite=favorite, name="m-sct", serving_slots=serving_slots
+    )
+
+
+def bottleneck_balance(
+    graph: OpGraph, cost: CostModel, *, serving_slots: int = 1
+) -> PlacementResult:
+    """Throughput list scheduler: greedily minimize the bottleneck-stage time.
+
+    Tasks are taken in ready order; each is placed on the device whose choice
+    yields the smallest max-loaded resource (device compute busy + directed
+    channel busy, per request), tie-broken by earliest finish (so the
+    schedule stays latency-sane among equal-bottleneck choices).  Runs on the
+    shared list-schedule engine — the memory handling and ready-set logic are
+    the common ones; only the candidate scoring differs."""
+    key, commit, objective_fn = _bottleneck_scorer(graph, cost)
+    return _greedy_list_schedule(
+        graph, cost, name="bottleneck-balance",
+        candidate_key=key, on_commit=commit, objective_fn=objective_fn,
+        serving_slots=serving_slots,
+    )
+
+
+def round_robin(
+    graph: OpGraph, cost: CostModel, *, serving_slots: int = 1
+) -> PlacementResult:
+    from .simulate import simulate
+
     t0 = _time.perf_counter()
     order = graph.topo_order()
     placement = {nid: i % cost.cluster.k for i, nid in enumerate(order)}
+    ok = cost.memory_ok(graph, placement, serving_slots=serving_slots)
+    # score through the event simulator: a NaN objective would compare False
+    # against everything and corrupt any best-candidate selection downstream
+    obj = simulate(graph, placement, cost).makespan
     return PlacementResult(
         placement=placement,
-        objective=float("nan"),
-        status="feasible" if cost.memory_ok(graph, placement) else "memory-relaxed",
+        objective=obj,
+        status="feasible" if ok else "memory-relaxed",
         mip_gap=float("nan"),
         solve_time=_time.perf_counter() - t0,
         method="round-robin",
     )
 
 
-def single_device(graph: OpGraph, cost: CostModel, k: Optional[int] = None) -> PlacementResult:
+def single_device(
+    graph: OpGraph,
+    cost: CostModel,
+    k: Optional[int] = None,
+    *,
+    serving_slots: int = 1,
+) -> PlacementResult:
+    from .simulate import simulate
+
     t0 = _time.perf_counter()
     if k is None:
-        # fastest device that fits the whole model, else the biggest-memory one
-        total = graph.total_param_bytes()
+        # fastest device that fits the whole model (weights + per-slot KV),
+        # else the biggest-memory one
+        total = graph.total_param_bytes() + max(serving_slots, 1) * graph.total_kv_bytes()
         fits = [
             i
             for i, d in enumerate(cost.cluster.devices)
@@ -272,10 +338,12 @@ def single_device(graph: OpGraph, cost: CostModel, k: Optional[int] = None) -> P
         else:
             k = int(np.argmax([d.mem_bytes for d in cost.cluster.devices]))
     placement = {nid: k for nid in graph.nodes}
+    ok = cost.memory_ok(graph, placement, serving_slots=serving_slots)
+    obj = simulate(graph, placement, cost).makespan
     return PlacementResult(
         placement=placement,
-        objective=float("nan"),
-        status="feasible" if cost.memory_ok(graph, placement) else "memory-relaxed",
+        objective=obj,
+        status="feasible" if ok else "memory-relaxed",
         mip_gap=float("nan"),
         solve_time=_time.perf_counter() - t0,
         method=f"single-device[{k}]",

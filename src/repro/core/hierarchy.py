@@ -138,6 +138,7 @@ def _materialize_clusters(
             flops=sum(x.flops for x in nodes),
             bytes_accessed=sum(x.bytes_accessed for x in nodes),
             param_bytes=sum(x.param_bytes for x in nodes),
+            kv_bytes=sum(x.kv_bytes for x in nodes),
             output_bytes=ext_out,
             fused_ids=tuple(sorted(members)),
         )

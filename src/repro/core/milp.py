@@ -11,6 +11,32 @@ Faithful construction of the paper's model over the augmented DAG Ḡ:
        (7)  z_q / u_{qk'k''} channel selection + C_q coupling    [comm]
        (8)  big-M congestion control        ∀ comm pairs w/o precedence, ∀k
 
+Throughput-native mode (``objective="throughput"``)
+---------------------------------------------------
+The paper's T is a single query's end-to-end latency.  A saturated serving
+pipeline instead completes one request per *bottleneck interval* — the busy
+time of the most loaded resource (``core.simulate.bottleneck_time``).  In
+throughput mode the objective is replaced by per-resource busy-time
+accumulators:
+
+  min  T
+  s.t. T ≥ Σ_i p_ik x_ik                    ∀ devices k          [busy(dev)]
+       T ≥ Σ_q p^comm_{q,k',k''} u_{qk'k''} ∀ channels (k',k'')  [busy(chan)]
+
+while every scheduling family (4/6/7/8) is kept as a *feasibility* check —
+the solution must still admit a valid one-query schedule within the horizon,
+but the makespan is no longer what is minimized.  The two objectives diverge
+whenever latency-optimal packing (everything on the fastest device to avoid
+hops) serializes requests on that device: throughput mode accepts longer
+single-query critical paths in exchange for balanced per-resource busy time,
+which is exactly the pipelined-partitioning objective (Tarnawski et al.).
+
+Eq. 5 is extended with a per-slot KV-cache resident cost in BOTH modes:
+``m_i = param_bytes_i + serving_slots × kv_bytes_i`` — each concurrently
+served request keeps its own KV cache resident on the device hosting the op,
+so memory-tight placements that fit one query can be infeasible under
+``serving_slots > 1`` (the slot-unaware model wrongly admits them).
+
 Solved with HiGHS branch-and-cut via ``scipy.optimize.milp`` (Gurobi is not
 available offline — see DESIGN.md §7).  Times are internally rescaled so the
 schedule horizon is O(1e3), keeping the big-M coefficients well-conditioned.
@@ -33,7 +59,9 @@ from .graph import AugmentedDAG, OpGraph, augment
 @dataclass
 class PlacementResult:
     placement: Dict[int, int]            # op id -> device
-    objective: float                     # solver makespan (seconds)
+    objective: float                     # solver objective (seconds): makespan
+                                         # in latency mode, bottleneck busy
+                                         # time in throughput mode
     status: str                          # "optimal" | "feasible" | "infeasible" | "timeout"
     mip_gap: float
     solve_time: float
@@ -83,22 +111,37 @@ def solve_placement(
     aug: Optional[AugmentedDAG] = None,
     upper_bound: Optional[float] = None,
     congestion_min_frac: float = 0.005,
+    objective: str = "latency",
+    serving_slots: int = 1,
+    horizon: Optional[float] = None,
     verbose: bool = False,
 ) -> PlacementResult:
     """Solve the Moirai MILP for ``graph`` on ``cost.cluster``.
 
-    ``upper_bound`` (seconds): a known-feasible makespan (e.g. from a
-    heuristic schedule, which satisfies every MILP constraint family — see
-    simulate.validate_schedule).  It is used as ``T ≤ UB`` *and* as the big-M
-    horizon, which shrinks every disjunctive constraint's relaxation — an
-    optimality-preserving beyond-paper speedup over the paper's
-    sum-of-all-costs big-Ms.
+    ``objective``: ``"latency"`` minimizes the makespan (paper Eqs. 4–8);
+    ``"throughput"`` minimizes the max per-resource busy time (the
+    steady-state bottleneck interval — see module docstring).
+
+    ``serving_slots``: Eq. 5 charges each op ``param_bytes + serving_slots ×
+    kv_bytes`` resident memory (one KV-cache copy per concurrent request).
+
+    ``upper_bound`` (seconds): a known-feasible value of the *configured
+    objective* (e.g. from a heuristic schedule, which satisfies every MILP
+    constraint family — see simulate.validate_schedule).  It is used as
+    ``T ≤ UB``; in latency mode it also caps the big-M horizon, which shrinks
+    every disjunctive constraint's relaxation — an optimality-preserving
+    beyond-paper speedup over the paper's sum-of-all-costs big-Ms.  In
+    throughput mode a bottleneck UB says nothing about the makespan, so the
+    horizon stays at the sum-of-costs bound unless ``horizon`` (a feasible
+    makespan in seconds) is passed explicitly.
 
     ``congestion_min_frac``: congestion (Eq. 8) pairs are built only for
     flows whose worst-channel transfer time exceeds this fraction of the
     horizon; sub-microsecond flows cannot shift the makespan but would add
     O(β²·K) rows.
     """
+    if objective not in ("latency", "throughput"):
+        raise ValueError(f"unknown objective {objective!r}")
     t0 = _time.perf_counter()
     K = cost.cluster.k
     aug = aug or augment(graph)
@@ -117,10 +160,14 @@ def solve_placement(
     H_raw = sum(float(v.max()) for v in p.values()) + sum(
         float(np.max(m)) if m.size else 0.0 for m in pcomm.values()
     )
-    if upper_bound is not None:
-        # 20% slack: T ≤ 1.2·UB still prunes the tree hard, but leaves the
-        # solver's feasibility heuristics room to land a first incumbent
-        # (scipy's milp cannot take a MIP start)
+    # 20% slack on caller-supplied bounds: T ≤ 1.2·UB still prunes the tree
+    # hard, but leaves the solver's feasibility heuristics room to land a
+    # first incumbent (scipy's milp cannot take a MIP start)
+    if horizon is not None:
+        H_raw = min(H_raw, horizon * 1.2)
+    if upper_bound is not None and objective == "latency":
+        # a makespan UB is also a valid schedule horizon; a bottleneck UB
+        # (throughput mode) is not — it only bounds T, below
         H_raw = min(H_raw, upper_bound * 1.2)
     H_raw = max(H_raw, 1e-9)
     scale = 1e3 / H_raw  # rescale seconds so horizon ≈ 1e3
@@ -205,12 +252,10 @@ def solve_placement(
         b.add({xv(o, k): 1.0 for k in range(K)}, 1.0, 1.0)
 
     # ------------------------------------------------------------ (5) memory
+    # KV-aware resident cost: weights + one KV-cache copy per serving slot
+    m_res = {o: cost.resident_bytes(graph.nodes[o], serving_slots) for o in ops}
     for k in range(K):
-        coeffs = {
-            xv(o, k): graph.nodes[o].param_bytes
-            for o in ops
-            if graph.nodes[o].param_bytes
-        }
+        coeffs = {xv(o, k): m_res[o] for o in ops if m_res[o]}
         if coeffs:
             b.add(coeffs, -np.inf, cost.cluster.devices[k].mem_bytes)
 
@@ -292,15 +337,40 @@ def solve_placement(
                 coeffs[col] = coeffs.get(col, 0.0) - val
             b.add(coeffs, -Ms - 2.0 * Ml - 2.0 * Mr, np.inf)
 
-    # ------------------------------------------------------- makespan T
-    for o in graph.sinks():
-        b.add({off_T: 1.0, Cv(o): -1.0}, 0.0, np.inf)  # T ≥ C_sink
+    # ----------------------------------------------------------- objective T
+    if objective == "latency":
+        # T is the makespan: T ≥ C_sink
+        for o in graph.sinks():
+            b.add({off_T: 1.0, Cv(o): -1.0}, 0.0, np.inf)
+    else:
+        # T is the steady-state bottleneck interval: per-resource busy-time
+        # accumulators.  Device k's per-request busy time is Σ_i p_ik x_ik;
+        # channel (a,b)'s is Σ_q p^comm_{q,a,b} u_{q,a,b} (u is pinned to the
+        # actual endpoint devices by the Eq. 7 lower bounds, so the busy sum
+        # cannot be understated by relaxing u).
+        for k in range(K):
+            coeffs = {off_T: 1.0}
+            for o in ops:
+                if p[o][k]:
+                    coeffs[xv(o, k)] = -float(p[o][k])
+            b.add(coeffs, 0.0, np.inf)
+        for (a, bb) in chan_pairs:
+            coeffs = {off_T: 1.0}
+            for q in comms:
+                t = float(pcomm[q][a, bb]) if pcomm[q].size else 0.0
+                if t:
+                    coeffs[uv(q, a, bb)] = -t
+            if len(coeffs) > 1:
+                b.add(coeffs, 0.0, np.inf)
 
     # --------------------------------------------------------- var bounds
     lb = np.zeros(nvars)
     ub = np.ones(nvars)
     ub[off_S : off_z] = H          # S and C ranges
     ub[off_T] = H
+    if upper_bound is not None and objective == "throughput":
+        # bottleneck UB bounds T directly (same 20% incumbent slack as above)
+        ub[off_T] = min(H, upper_bound * scale * 1.2)
     integrality = np.zeros(nvars)
     integrality[off_x : off_x + nops * K] = 1
     integrality[off_z : off_z + ncomm] = 1
@@ -330,7 +400,12 @@ def solve_placement(
             status="infeasible" if res.status == 2 else "timeout",
             mip_gap=float("inf"),
             solve_time=solve_time,
-            extra={"scipy_status": int(res.status), "message": str(res.message)},
+            extra={
+                "scipy_status": int(res.status),
+                "message": str(res.message),
+                "milp_objective": objective,
+                "serving_slots": serving_slots,
+            },
         )
 
     x = res.x
@@ -363,5 +438,7 @@ def solve_placement(
             "nrows": len(b.lb),
             "n_op_pairs": len(op_pairs),
             "n_comm_pairs": len(comm_pairs),
+            "milp_objective": objective,
+            "serving_slots": serving_slots,
         },
     )

@@ -76,6 +76,10 @@ def transformer_graph(
     )
     x = embed
 
+    # per-layer KV-cache residency: K and V tensors for the full sequence,
+    # kept alive per in-flight request (multiplied by serving slots in Eq. 5)
+    layer_kv_bytes = 2.0 * s * kv * hd * BF16
+
     if granularity in ("layer", "block"):
         for i in range(cfg.n_layers):
             attn_flops = 2.0 * s * d * (h * hd + 2 * kv * hd) + 4.0 * s * s * h * hd + 2.0 * s * h * hd * d
@@ -86,6 +90,7 @@ def transformer_graph(
                 flops=attn_flops,
                 bytes_accessed=4 * elems * BF16 + attn_params,
                 param_bytes=attn_params,
+                kv_bytes=layer_kv_bytes,
                 output_bytes=elems * BF16,
             )
             if cfg.n_experts:
@@ -110,6 +115,7 @@ def transformer_graph(
                     flops=attn_flops + ff_flops,
                     bytes_accessed=8 * elems * BF16 + attn_params + ff_params,
                     param_bytes=attn_params + ff_params,
+                    kv_bytes=layer_kv_bytes,
                     output_bytes=elems * BF16,
                 )
             else:
@@ -137,8 +143,10 @@ def transformer_graph(
     for i in range(cfg.n_layers):
         ln1 = _elt(g, "rmsnorm", x, elems, params=d * 4)
         q = _matmul(g, f"L{i}.wq", ln1, s, d, h * hd)
-        k = _matmul(g, f"L{i}.wk", ln1, s, d, kv * hd)
-        v = _matmul(g, f"L{i}.wv", ln1, s, d, kv * hd)
+        # the K/V projections produce the cached tensors: each carries half the
+        # layer's per-request KV residency
+        k = _matmul(g, f"L{i}.wk", ln1, s, d, kv * hd, kv_bytes=layer_kv_bytes / 2)
+        v = _matmul(g, f"L{i}.wv", ln1, s, d, kv * hd, kv_bytes=layer_kv_bytes / 2)
         qr = _elt(g, "rope", q, s * h * hd)
         kr = _elt(g, "rope", k, s * kv * hd)
         scores = g.add(

@@ -18,9 +18,16 @@ Planning objectives
   saturated serving pipeline requests complete once per bottleneck interval,
   so minimizing it maximizes steady-state requests/sec even when it costs
   single-query latency (classic pipelined-partitioning objective; see
-  Tarnawski et al.).  The throughput objective widens the moirai envelope
-  with the ``bottleneck_balance`` list scheduler and re-scores the MILP
-  solution and every heuristic candidate by bottleneck time.
+  Tarnawski et al.).  The MILP is objective-native: in throughput mode it
+  minimizes the max per-resource busy time directly (busy-time accumulators
+  over Eqs. 4/6/7/8 kept as feasibility — see core.milp), the envelope is
+  widened with the ``bottleneck_balance`` list scheduler (and a
+  throughput-mode GETF), and every candidate is scored by bottleneck time.
+
+``PlanConfig.serving_slots`` threads the engine's concurrent-request count
+into Eq. 5: every op's resident cost is ``param_bytes + serving_slots ×
+kv_bytes`` (one KV-cache copy per in-flight request), for the MILP, every
+heuristic's memory caps, and candidate scoring alike.
 """
 
 from __future__ import annotations
@@ -57,11 +64,15 @@ MILP_EXACT_MAX_NODES = 48
 class PlanConfig:
     method: str = "moirai"           # moirai|etf|getf|msct|bottleneck_balance|placeto|round_robin|single
     # "latency" (makespan) | "throughput" (bottleneck-stage time).  Selects
-    # what the MOIRAI envelope scores candidates by; the explicit heuristic
-    # methods each optimize their own intrinsic criterion regardless (use
+    # the MILP objective AND what the MOIRAI envelope scores candidates by;
+    # objective-aware methods (getf, placeto) optimize it too, the remaining
+    # heuristics keep their intrinsic criterion (use
     # method="bottleneck_balance" for a standalone throughput heuristic).
     # extra["objective"] always records the CONFIGURED objective.
     objective: str = "latency"
+    # concurrent serving slots: Eq. 5 charges serving_slots × kv_bytes of
+    # resident KV cache per op (the engine passes its slot count here)
+    serving_slots: int = 1
     coarsen: bool = True             # GCOF (Fig. 10 c/d vs a/b)
     rules: Optional[Sequence[Sequence[str]]] = None
     time_limit: float = 120.0
@@ -92,20 +103,41 @@ def plan(
 
     t0 = _time.perf_counter()
     rules = cfg.rules if cfg.rules is not None else DEFAULT_RULES
+    slots = max(int(cfg.serving_slots), 1)
 
     from .simulate import bottleneck_time as _bneck, simulate as _sim
 
     def _score(g_, pl) -> float:
-        """What a candidate placement is worth under the configured objective."""
+        """What a candidate placement is worth under the configured objective.
+
+        A placement that overflows device memory once every serving slot's
+        KV cache is resident scores infinite — the envelope must never pick a
+        candidate the serving engine cannot actually admit."""
+        if slots > 1 and not cost.memory_ok(g_, pl, serving_slots=slots):
+            return float("inf")
         if cfg.objective == "throughput":
             return _bneck(g_, pl, cost)
         return _sim(g_, pl, cost).makespan
 
-    # the heuristic candidate pool; the throughput objective adds the
-    # bottleneck-balancing scheduler (the others all chase earliest finish)
-    heuristic_pool = (msct, etf, getf)
+    # the heuristic candidate pool (closed over the slot count so memory
+    # feasibility is KV-aware); the throughput objective adds the
+    # bottleneck-balancing scheduler and switches GETF to its
+    # bottleneck-criterion mode (the others all chase earliest finish)
+    def _h_msct(g_):
+        return msct(g_, cost, serving_slots=slots)
+
+    def _h_etf(g_):
+        return etf(g_, cost, serving_slots=slots)
+
+    def _h_getf(g_):
+        return getf(g_, cost, objective=cfg.objective, serving_slots=slots)
+
+    def _h_bneck(g_):
+        return bottleneck_balance(g_, cost, serving_slots=slots)
+
+    heuristic_pool = (_h_msct, _h_etf, _h_getf)
     if cfg.objective == "throughput":
-        heuristic_pool = heuristic_pool + (bottleneck_balance,)
+        heuristic_pool = heuristic_pool + (_h_bneck,)
 
     # ------------------------------------------------ step 2: coarsening
     work = gcof(graph, rules) if cfg.coarsen else graph
@@ -134,16 +166,24 @@ def plan(
             else:
                 target, member_to_super = cluster_graph(work, cfg.max_exact_nodes)
         # prime the exact solve with the best heuristic schedule: a greedy
-        # list schedule satisfies every MILP constraint family, so its
-        # makespan is a valid incumbent bound (T ≤ UB) and a tight big-M.
-        # The UB is always a MAKESPAN (the MILP's objective) even when the
-        # envelope below scores candidates by bottleneck time.
+        # list schedule satisfies every MILP constraint family (including
+        # KV-aware Eq. 5 — its memory caps charge the same resident cost), so
+        # its score is a valid incumbent bound (T ≤ UB) in the MILP's OWN
+        # objective units: makespan for "latency", bottleneck busy time for
+        # "throughput".  (The horizon is NOT clamped to a heuristic makespan
+        # in throughput mode: the throughput-optimal placement may need a
+        # longer single-query schedule than any latency heuristic's.)
         ub = None
         for h in heuristic_pool:
-            r = h(target, cost)
-            if r.status == "feasible":
-                mk = _sim(target, r.placement, cost).makespan
-                ub = mk if ub is None else min(ub, mk)
+            r = h(target)
+            if r.status != "feasible":
+                continue
+            val = (
+                _bneck(target, r.placement, cost)
+                if cfg.objective == "throughput"
+                else _sim(target, r.placement, cost).makespan
+            )
+            ub = val if ub is None else min(ub, val)
         res = solve_placement(
             target,
             cost,
@@ -151,6 +191,8 @@ def plan(
             mip_rel_gap=cfg.mip_rel_gap,
             congestion=cfg.congestion,
             upper_bound=ub,
+            objective=cfg.objective,
+            serving_slots=slots,
         )
         if member_to_super is not None and res.placement:
             coarse_placement = lift_placement(member_to_super, res.placement)
@@ -173,7 +215,7 @@ def plan(
         )
         best_h, sc_h = None, float("inf")
         for h in heuristic_pool:
-            r = h(work, cost)
+            r = h(work)
             if r.status != "feasible":
                 continue
             sc = _score(work, r.placement)
@@ -189,27 +231,34 @@ def plan(
             res.extra["envelope_score"] = sc_milp
             res.extra["heuristic_best"] = sc_h
     elif cfg.method == "etf":
-        res = etf(work, cost)
+        res = etf(work, cost, serving_slots=slots)
         coarse_placement = res.placement
     elif cfg.method == "getf":
-        res = getf(work, cost)
+        res = getf(work, cost, objective=cfg.objective, serving_slots=slots)
         coarse_placement = res.placement
     elif cfg.method == "msct":
-        res = msct(work, cost)
+        res = msct(work, cost, serving_slots=slots)
         coarse_placement = res.placement
     elif cfg.method == "bottleneck_balance":
-        res = bottleneck_balance(work, cost)
+        res = bottleneck_balance(work, cost, serving_slots=slots)
         coarse_placement = res.placement
     elif cfg.method == "placeto":
         from .placeto import placeto  # lazy: pulls in jax
 
-        res = placeto(work, cost, iters=cfg.placeto_iters, seed=cfg.seed)
+        res = placeto(
+            work,
+            cost,
+            iters=cfg.placeto_iters,
+            seed=cfg.seed,
+            objective=cfg.objective,
+            serving_slots=slots,
+        )
         coarse_placement = res.placement
     elif cfg.method == "round_robin":
-        res = round_robin(work, cost)
+        res = round_robin(work, cost, serving_slots=slots)
         coarse_placement = res.placement
     elif cfg.method == "single":
-        res = single_device(work, cost)
+        res = single_device(work, cost, serving_slots=slots)
         coarse_placement = res.placement
     else:
         raise ValueError(f"unknown placement method {cfg.method!r}")
@@ -224,6 +273,7 @@ def plan(
     res.solve_time = _time.perf_counter() - t0
     res.extra["coarsened"] = cfg.coarsen
     res.extra["objective"] = cfg.objective
+    res.extra["serving_slots"] = slots
     res.extra["n_original"] = len(graph)
     res.extra["n_coarse"] = len(work)
     return res

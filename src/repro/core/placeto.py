@@ -9,8 +9,12 @@ it 3–4×), so we implement a compact, faithful-in-interface REINFORCE agent:
 * per-node features: normalized flops / resident bytes / output bytes /
   topo depth / fan-in / fan-out  (Placeto's graph embedding, simplified),
 * a linear-softmax policy over devices (JAX, trained with jax.grad),
-* reward = −simulated makespan (the simulator replaces the paper's
-  real-cluster measurement), with a moving-average baseline,
+* reward = −simulated cost of the episode's placement under the CONFIGURED
+  planning objective — makespan for ``objective="latency"``, bottleneck-stage
+  time for ``objective="throughput"`` (the simulator replaces the paper's
+  real-cluster measurement) — with a moving-average baseline.  Threading the
+  objective keeps baseline comparisons against the throughput MILP
+  apples-to-apples instead of silently rewarding the wrong quantity,
 * trained for a bounded budget (`iters`), then greedy-decoded.
 """
 
@@ -26,7 +30,7 @@ import numpy as np
 from .costmodel import CostModel
 from .graph import OpGraph
 from .milp import PlacementResult
-from .simulate import simulate
+from .simulate import bottleneck_time, simulate
 
 
 def _features(graph: OpGraph) -> np.ndarray:
@@ -66,7 +70,11 @@ def placeto(
     batch: int = 8,
     lr: float = 0.05,
     seed: int = 0,
+    objective: str = "latency",
+    serving_slots: int = 1,
 ) -> PlacementResult:
+    if objective not in ("latency", "throughput"):
+        raise ValueError(f"unknown objective {objective!r}")
     t0 = _time.perf_counter()
     order = graph.topo_order()
     feats = jnp.asarray(_features(graph))           # [n, F]
@@ -89,11 +97,14 @@ def placeto(
 
     def reward(choice: np.ndarray) -> float:
         placement = {nid: int(choice[i]) for i, nid in enumerate(order)}
-        mk = simulate(graph, placement, cost).makespan
-        # memory violation penalty (Placeto's OOM negative reward)
-        if not cost.memory_ok(graph, placement):
-            mk *= 4.0
-        return -mk
+        if objective == "throughput":
+            score = bottleneck_time(graph, placement, cost)
+        else:
+            score = simulate(graph, placement, cost).makespan
+        # memory violation penalty (Placeto's OOM negative reward), KV-aware
+        if not cost.memory_ok(graph, placement, serving_slots=serving_slots):
+            score *= 4.0
+        return -score
 
     @jax.jit
     def grad_step(w, advantages, choices):
@@ -125,11 +136,13 @@ def placeto(
         w = grad_step(w, adv, jnp.asarray(np.stack(choices)))
 
     placement = {nid: int(best_choice[i]) for i, nid in enumerate(order)}
+    ok = cost.memory_ok(graph, placement, serving_slots=serving_slots)
     return PlacementResult(
         placement=placement,
         objective=-best_r,
-        status="feasible" if cost.memory_ok(graph, placement) else "memory-relaxed",
+        status="feasible" if ok else "memory-relaxed",
         mip_gap=float("nan"),
         solve_time=_time.perf_counter() - t0,
         method="placeto-rl",
+        extra={"objective": objective, "serving_slots": serving_slots},
     )

@@ -317,17 +317,52 @@ class PipelineResult:
 
 
 def _resolve_arrivals(n_requests: int, arrival) -> List[float]:
-    """``arrival``: None/0 → all at t=0 (saturated); float → fixed
-    inter-arrival gap; sequence → explicit per-request times."""
+    """Resolve an arrival-process spec into per-request timestamps.
+
+    ``arrival`` forms:
+
+    * ``None`` / ``0``                → all at t=0 (saturated pipeline);
+    * ``float``                       → fixed inter-arrival gap (open loop);
+    * ``("poisson", rate[, seed])``   → seeded Poisson process with ``rate``
+      requests/sec (i.i.d. exponential gaps) — bursty open-loop load, so
+      throughput benchmarks stop overstating steady-state req/s the way a
+      perfectly regular fixed-gap stream does;
+    * sequence of floats              → explicit per-request timestamps
+      (trace replay); must be non-negative and non-decreasing.
+    """
     if arrival is None:
         return [0.0] * n_requests
     if isinstance(arrival, (int, float)):
+        if arrival < 0:
+            raise ValueError(f"inter-arrival gap must be >= 0, got {arrival}")
         return [i * float(arrival) for i in range(n_requests)]
+    if (
+        isinstance(arrival, (tuple, list))
+        and len(arrival) > 0
+        and arrival[0] == "poisson"
+    ):
+        if len(arrival) not in (2, 3):
+            raise ValueError(
+                'poisson arrival spec must be ("poisson", rate) or '
+                f'("poisson", rate, seed), got {arrival!r}'
+            )
+        rate = float(arrival[1])
+        if not math.isfinite(rate) or rate <= 0:
+            raise ValueError(f"poisson rate must be a finite value > 0, got {rate}")
+        seed = int(arrival[2]) if len(arrival) == 3 else 0
+        import numpy as _np
+
+        gaps = _np.random.default_rng(seed).exponential(1.0 / rate, size=n_requests)
+        return [float(t) for t in _np.cumsum(gaps)]
     arrivals = [float(a) for a in arrival]
     if len(arrivals) != n_requests:
         raise ValueError(
             f"arrival sequence has {len(arrivals)} entries for {n_requests} requests"
         )
+    if any(a < 0 for a in arrivals):
+        raise ValueError("trace arrival times must be non-negative")
+    if any(b < a for a, b in zip(arrivals, arrivals[1:])):
+        raise ValueError("trace arrival times must be non-decreasing")
     return arrivals
 
 
@@ -342,6 +377,10 @@ def simulate_pipeline(
     aug: Optional[AugmentedDAG] = None,
 ) -> PipelineResult:
     """Simulate ``n_requests`` copies of the placed graph sharing one cluster.
+
+    ``arrival`` selects the arrival process — saturated, fixed-gap,
+    ``("poisson", rate[, seed])``, or an explicit timestamp trace (see
+    :func:`_resolve_arrivals`).
 
     ``max_in_flight`` caps concurrency (serving slots): a request is admitted
     — its root tasks released — only once fewer than ``max_in_flight``

@@ -18,6 +18,7 @@
 
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
@@ -66,12 +67,23 @@ class ServingEngine:
         self.eos_id = eos_id
         self.straggler_factor = straggler_factor
         # serving >1 slot is a pipelined workload: optimize steady-state
-        # throughput (bottleneck-stage time), not single-query makespan
-        self.plan_cfg = plan_cfg or PlanConfig(
-            method="moirai",
-            time_limit=20.0,
-            objective="throughput" if slots > 1 else "latency",
-        )
+        # throughput (bottleneck-stage time), not single-query makespan, and
+        # charge Eq. 5 one resident KV-cache copy per slot so the planner
+        # never admits a placement the engine cannot hold at full concurrency
+        if plan_cfg is None:
+            plan_cfg = PlanConfig(
+                method="moirai",
+                time_limit=20.0,
+                objective="throughput" if slots > 1 else "latency",
+                serving_slots=slots,
+            )
+        elif plan_cfg.serving_slots == 1 and slots > 1:
+            # a caller-supplied config (e.g. just raising the solver budget)
+            # still gets the engine's real concurrency unless it explicitly
+            # chose a slot count — otherwise plan() and replan() would admit
+            # placements whose per-slot KV residency overflows device memory
+            plan_cfg = dataclasses.replace(plan_cfg, serving_slots=slots)
+        self.plan_cfg = plan_cfg
 
         self.graph = transformer_graph(cfg, seq_len=max_len, granularity="block")
         self._cost = CostModel(cluster)

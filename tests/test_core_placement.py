@@ -193,6 +193,30 @@ def test_plan_coarsened_vs_original():
     assert mk_coarse <= mk_orig * 1.15
 
 
+def test_round_robin_and_single_device_are_scored():
+    """Regression: these baselines returned objective=NaN, and NaN compares
+    False against everything, so any best-candidate selection over a result
+    pool silently kept or dropped them depending on iteration order."""
+    import math
+
+    g = random_dag(12, seed=9)
+    cm = CostModel(inter_server_cluster())
+    rr = round_robin(g, cm)
+    sd = single_device(g, cm)
+    for res in (rr, sd):
+        assert math.isfinite(res.objective), res.method
+        # scored through the same event simulator as everyone else
+        assert res.objective == pytest.approx(
+            simulate(g, res.placement, cm).makespan, rel=1e-9
+        ), res.method
+    # best-candidate selection over a pool including them is now well-defined:
+    # min() actually returns the smallest-makespan candidate
+    pool = [rr, sd, etf(g, cm)]
+    best = min(pool, key=lambda r: r.objective)
+    assert best.objective == min(r.objective for r in pool)
+    assert all(best.objective <= r.objective for r in pool)
+
+
 def test_placeto_improves_over_random():
     """The RL baseline must at least learn to beat its own random init."""
     from repro.core.placeto import placeto

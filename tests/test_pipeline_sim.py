@@ -113,6 +113,52 @@ def test_arrival_modes():
         simulate_pipeline(g, pl, cm, 3, arrival=[0.0, 1.0])  # wrong length
     with pytest.raises(ValueError):
         simulate_pipeline(g, pl, cm, 2, arrival=[1.0, 0.0])  # decreasing
+    with pytest.raises(ValueError):
+        simulate_pipeline(g, pl, cm, 2, arrival=[-1.0, 0.0])  # negative trace
+    with pytest.raises(ValueError):
+        simulate_pipeline(g, pl, cm, 2, arrival=-0.5)  # negative gap
+
+
+def test_poisson_arrival_spec():
+    """("poisson", rate[, seed]) arrivals: seeded, validated, plausible."""
+    g = chain_graph(["matmul"] * 3, flops=1e9, output_bytes=1e4)
+    cl = inter_server_cluster()
+    cm = CostModel(cl)
+    pl = {nid: 0 for nid in g.nodes}
+    rate = 200.0
+    pr = simulate_pipeline(g, pl, cm, 50, arrival=("poisson", rate, 7))
+    # reproducible with the same seed, different with another
+    pr_same = simulate_pipeline(g, pl, cm, 50, arrival=("poisson", rate, 7))
+    assert pr.arrivals == pr_same.arrivals
+    pr_other = simulate_pipeline(g, pl, cm, 50, arrival=("poisson", rate, 8))
+    assert pr.arrivals != pr_other.arrivals
+    # arrivals are a valid non-decreasing process with ~1/rate mean gap
+    assert all(b >= a for a, b in zip(pr.arrivals, pr.arrivals[1:]))
+    mean_gap = pr.arrivals[-1] / len(pr.arrivals)
+    assert 0.3 / rate < mean_gap < 3.0 / rate
+    # default seed is 0
+    pr_default = simulate_pipeline(g, pl, cm, 50, arrival=("poisson", rate))
+    pr_seed0 = simulate_pipeline(g, pl, cm, 50, arrival=("poisson", rate, 0))
+    assert pr_default.arrivals == pr_seed0.arrivals
+    # bursty gaps mean queueing: steady req/s cannot beat the offered rate
+    # or the bottleneck service rate
+    cap = min(rate, 1.0 / bottleneck_time(g, pl, cm))
+    assert pr.steady_throughput <= cap * 1.5
+
+
+def test_poisson_arrival_spec_validation():
+    g = chain_graph(["matmul"] * 2, flops=1e8)
+    cm = CostModel(inter_server_cluster())
+    pl = {nid: 0 for nid in g.nodes}
+    for bad in (
+        ("poisson",),                    # missing rate
+        ("poisson", 0.0),                # rate must be > 0
+        ("poisson", -5.0),               # negative rate
+        ("poisson", float("inf")),       # non-finite rate
+        ("poisson", 10.0, 0, "extra"),   # too many fields
+    ):
+        with pytest.raises(ValueError):
+            simulate_pipeline(g, pl, cm, 3, arrival=bad)
 
 
 # --------------------------------------- throughput vs bandwidth monotone

@@ -57,6 +57,9 @@ def test_engine_serves_batched_requests(small_model):
     cluster = tpu_slice_cluster(n_slices=1)
     eng = ServingEngine(cfg, params, cluster, slots=2, max_len=64,
                         plan_cfg=PlanConfig(method="etf"), eos_id=-1)
+    # a caller-supplied plan config still gets the engine's real concurrency
+    # (Eq. 5 charges one KV-cache copy per slot), for plan AND future replans
+    assert eng.plan_cfg.serving_slots == 2
     reqs = [Request(rid=i, prompt=[1, 2, 3 + i], max_new_tokens=4) for i in range(5)]
     for r in reqs:
         eng.submit(r)
