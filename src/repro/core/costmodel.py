@@ -41,6 +41,17 @@ DEFAULT_DISPATCH_OVERHEAD_S = 3e-6  # per-kernel launch overhead
 
 @dataclass
 class CostModel:
+    """Per-(op, device) compute time, per-flow transfer time, and Eq. 5
+    memory accounting for one :class:`ClusterSpec`.
+
+    Compute time is a calibrated roofline — ``max(flops/(peak·eff),
+    bytes/hbm_bw) + dispatch overhead`` — with per-op-class efficiencies
+    (``efficiency``), an optional multiplicative per-device calibration
+    (``device_scale``), and the cluster's widest-path channel model for
+    communication.  Build one per cluster *as observed*: the serving
+    engine's adaptation loop rebuilds its model from
+    ``cluster.with_derate(...)`` so predictions track measured speeds."""
+
     cluster: ClusterSpec
     efficiency: Mapping[str, float] = field(default_factory=lambda: dict(DEFAULT_EFFICIENCY))
     dispatch_overhead_s: float = DEFAULT_DISPATCH_OVERHEAD_S
@@ -170,6 +181,83 @@ class CostModel:
         return max(
             self.critical_path_lower_bound(graph), self.total_work_lower_bound(graph)
         )
+
+
+class DerateCalibrator:
+    """Turns stage-level observed/predicted time ratios into per-device
+    speed ratios, attributed across op classes (paper §III-C calibration,
+    runtime edition).
+
+    The serving engine observes whole *stages* (one scalar ratio per stage
+    per window), but a device may be slow only on some op classes — e.g. a
+    throttled MXU hurts matmul-bound blocks more than bandwidth-bound ones.
+    Each stage sample is therefore attributed to the op classes executing in
+    that stage, weighted by their predicted share of the stage time; the
+    device-level ratio is then the weight-averaged (log-space) ratio over
+    everything observed on that device.  The resulting ratio feeds the
+    adaptive derate policy: ratio r > 1 means "device runs r× slower than
+    the current cost model says", so the policy divides the device's speed
+    factor by r.
+
+    Usage::
+
+        cal = DerateCalibrator()
+        cal.add_stage_sample(device=2, ratio=2.1, class_weights={"block": 1.0})
+        cal.device_ratios()       # {2: 2.1}
+        cal.op_class_ratios(2)    # {"block": 2.1}
+    """
+
+    def __init__(self) -> None:
+        # (device, op_class) -> [sum of w*log(ratio), sum of w]
+        self._acc: Dict[tuple, list] = {}
+
+    def add_stage_sample(
+        self,
+        device: int,
+        ratio: float,
+        class_weights: Mapping[str, float],
+    ) -> None:
+        """Record one stage observation.
+
+        ``ratio`` is the stage's observed/predicted time (already normalized
+        against the fleet baseline by the caller so absolute cost-model error
+        cancels); ``class_weights`` maps op class → predicted-time share of
+        the stage (weights are normalized internally).  Non-finite or
+        non-positive ratios are ignored.
+        """
+        if not (ratio > 0.0 and np.isfinite(ratio)):
+            return
+        total = sum(w for w in class_weights.values() if w > 0)
+        if total <= 0:
+            class_weights, total = {"default": 1.0}, 1.0
+        for cls, w in class_weights.items():
+            if w <= 0:
+                continue
+            acc = self._acc.setdefault((device, cls), [0.0, 0.0])
+            acc[0] += (w / total) * float(np.log(ratio))
+            acc[1] += w / total
+
+    def op_class_ratios(self, device: int) -> Dict[str, float]:
+        """Per-op-class observed/predicted ratio for ``device`` (geometric
+        mean of the weighted samples attributed to each class)."""
+        return {
+            cls: float(np.exp(s / w))
+            for (dev, cls), (s, w) in self._acc.items()
+            if dev == device and w > 0
+        }
+
+    def device_ratios(self) -> Dict[int, float]:
+        """Device → overall observed/predicted speed ratio (weight-averaged
+        over all op classes observed on that device); the derate policy's
+        input."""
+        by_dev: Dict[int, list] = {}
+        for (dev, _cls), (s, w) in self._acc.items():
+            acc = by_dev.setdefault(dev, [0.0, 0.0])
+            acc[0] += s
+            acc[1] += w
+        return {
+            dev: float(np.exp(s / w)) for dev, (s, w) in by_dev.items() if w > 0
+        }
 
 
 def calibrate_from_cost_analysis(

@@ -15,8 +15,8 @@ Presets copy the paper's Table III testbeds and add TPU-native clusters
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass, field, replace as _dc_replace
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -33,6 +33,27 @@ class DeviceSpec:
     mem_bytes: float           # memory capacity
     hbm_bw: float              # bytes/s local memory bandwidth
     kind: str = "gpu"          # "gpu" | "tpu_slice" | "cpu"
+
+    def derated(self, factor: float) -> "DeviceSpec":
+        """A copy of this device running at ``factor``× its nominal speed.
+
+        ``factor`` scales both ``peak_flops`` and ``hbm_bw`` (a thermally
+        throttled or contended device loses compute and memory bandwidth
+        together); memory *capacity* is untouched — a slow device still
+        holds the same weights and KV cache.  ``factor`` must be > 0;
+        values < 1 slow the device, 1.0 returns ``self`` unchanged.
+        The spec is frozen, so this is the only mutation path — callers
+        (``ClusterSpec.with_derate``) always get a fresh object.
+        """
+        if not (factor > 0.0 and math.isfinite(factor)):
+            raise ValueError(f"derate factor must be finite and > 0, got {factor}")
+        if factor == 1.0:
+            return self
+        return _dc_replace(
+            self,
+            peak_flops=self.peak_flops * factor,
+            hbm_bw=self.hbm_bw * factor,
+        )
 
 
 @dataclass
@@ -107,6 +128,34 @@ class ClusterSpec:
         return bool(np.all(self._closure[0] > 0))
 
     # -------------------------------------------------------------- elastic
+    def with_derate(self, derate: Mapping[int, float]) -> "ClusterSpec":
+        """Clone of the cluster with per-device speed factors applied.
+
+        ``derate`` maps device index → speed factor (1.0 = nominal, 0.5 =
+        half speed); missing devices keep their nominal spec.  Factors scale
+        ``peak_flops`` and ``hbm_bw`` (see :meth:`DeviceSpec.derated`);
+        device indices, link bandwidths/latencies, and memory capacities are
+        preserved, so placements and cost models over the clone use the SAME
+        indices as the original — this is what lets the serving engine
+        re-plan on an observed-speed cluster and still address its original
+        device handles.  The original cluster is never mutated.
+        """
+        if not derate:
+            return self
+        for i in derate:
+            if not 0 <= i < self.k:
+                raise ValueError(f"derate index {i} out of range for k={self.k}")
+        devices = [
+            d.derated(float(derate.get(i, 1.0))) for i, d in enumerate(self.devices)
+        ]
+        tag = ",".join(f"{i}:{derate[i]:.3g}" for i in sorted(derate))
+        return ClusterSpec(
+            devices=devices,
+            link_bw=self.link_bw.copy(),
+            link_latency=self.link_latency.copy(),
+            name=f"{self.name}@derate[{tag}]",
+        )
+
     def without_device(self, idx: int) -> "ClusterSpec":
         """Cluster minus one failed device (elastic re-placement support)."""
         keep = [i for i in range(self.k) if i != idx]
@@ -248,4 +297,7 @@ PRESETS = {
 
 
 def get_cluster(name: str, **kw) -> ClusterSpec:
+    """Build a preset cluster by name — one of ``inter_server`` /
+    ``intra_server`` (paper Table III testbeds), ``tpu_slices``, or
+    ``tpu_multi_pod`` — forwarding ``**kw`` to its factory."""
     return PRESETS[name](**kw)

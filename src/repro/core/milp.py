@@ -58,6 +58,15 @@ from .graph import AugmentedDAG, OpGraph, augment
 
 @dataclass
 class PlacementResult:
+    """Outcome of any planner (MILP or heuristic): the placement itself
+    (op id → device index), the objective value in the configured
+    objective's units (makespan seconds for "latency", bottleneck busy-time
+    seconds for "throughput"), solver status/gap/time, the producing
+    ``method`` name, the solver's schedule (``start_times``/``end_times``,
+    per-flow ``channels``) when available, and an ``extra`` dict of
+    method-specific annotations (objective, serving_slots, derate map,
+    failed devices, envelope scores…)."""
+
     placement: Dict[int, int]            # op id -> device
     objective: float                     # solver objective (seconds): makespan
                                          # in latency mode, bottleneck busy

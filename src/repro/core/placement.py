@@ -34,7 +34,7 @@ from __future__ import annotations
 
 import time as _time
 from dataclasses import dataclass
-from typing import Dict, Iterable, Optional, Sequence
+from typing import Dict, Iterable, Mapping, Optional, Sequence
 
 from .costmodel import CostModel
 from .devices import ClusterSpec
@@ -62,6 +62,49 @@ MILP_EXACT_MAX_NODES = 48
 
 @dataclass
 class PlanConfig:
+    """Every knob of the planning pipeline, in one place.
+
+    Fields
+    ------
+    method:
+        Planner to run — ``"moirai"`` (GCOF coarsening + MILP + heuristic
+        envelope, the paper's full pipeline) or a single baseline: ``"etf"``,
+        ``"getf"``, ``"msct"``, ``"bottleneck_balance"``, ``"placeto"``,
+        ``"round_robin"``, ``"single"``.
+    objective:
+        What a placement is scored (and the MILP solved) by — ``"latency"``
+        (single-query makespan, paper Eqs. 4–8) or ``"throughput"``
+        (bottleneck-stage time, the steady-state completion interval of a
+        saturated serving pipeline).
+    serving_slots:
+        Concurrent in-flight requests the serving engine will run; Eq. 5
+        charges ``param_bytes + serving_slots × kv_bytes`` of resident
+        memory per op in the MILP, every heuristic's memory cap, and
+        candidate scoring.
+    coarsen:
+        Apply GCOF fusion coarsening before solving (paper Fig. 10 c/d vs
+        a/b).
+    rules:
+        Fusion rule set for GCOF (defaults to ``fusion.DEFAULT_RULES``).
+    time_limit:
+        MILP solver wall-clock budget in seconds.
+    mip_rel_gap:
+        Relative optimality gap at which the MILP may stop early.
+    congestion:
+        Model per-channel flow serialization (Eq. 8) in the MILP.
+    max_exact_nodes:
+        Largest graph solved exactly; bigger graphs go through chain
+        contraction / hierarchical clustering first.
+    max_chain_nodes:
+        Largest chain-contracted graph still solved exactly.
+    pair_budget:
+        Cap on non-overlap binary variable pairs for the exact MILP.
+    placeto_iters:
+        Policy-gradient iterations for the ``"placeto"`` baseline.
+    seed:
+        RNG seed for stochastic planners (placeto).
+    """
+
     method: str = "moirai"           # moirai|etf|getf|msct|bottleneck_balance|placeto|round_robin|single
     # "latency" (makespan) | "throughput" (bottleneck-stage time).  Selects
     # the MILP objective AND what the MOIRAI envelope scores candidates by;
@@ -93,7 +136,26 @@ def plan(
     cost: Optional[CostModel] = None,
     **overrides,
 ) -> PlacementResult:
-    """Place ``graph`` on ``cluster``; returns placement over ORIGINAL node ids."""
+    """Place ``graph`` on ``cluster`` — the full Moirai pipeline in one call.
+
+    Args:
+        graph: computation graph to place (any granularity).
+        cluster: heterogeneous device + link model the placement targets.
+        config: :class:`PlanConfig` selecting method, objective, slots, and
+            solver budgets (defaults to ``PlanConfig()``).
+        cost: optional pre-built :class:`CostModel` (defaults to a fresh
+            roofline model over ``cluster``).
+        **overrides: individual ``PlanConfig`` field overrides applied on
+            top of ``config`` (e.g. ``plan(g, c, method="etf")``).
+
+    Returns:
+        A :class:`PlacementResult` whose ``placement`` maps ORIGINAL node
+        ids (coarsening is lifted back) to device indices; ``extra`` records
+        the configured objective, serving slots, and coarsening stats.  For
+        ``method="moirai"`` the result is the best of the MILP route and
+        the heuristic pool under the configured objective (the envelope),
+        so Moirai ≥ best heuristic always holds.
+    """
     cfg = config or PlanConfig()
     for k, v in overrides.items():
         setattr(cfg, k, v)
@@ -282,14 +344,35 @@ def plan(
 def replan(
     graph: OpGraph,
     cluster: ClusterSpec,
-    failed_device,
+    failed_device=(),
     config: Optional[PlanConfig] = None,
+    *,
+    derate: Optional[Mapping[int, float]] = None,
 ) -> PlacementResult:
-    """Elastic re-placement after losing one device (int) or several
-    accumulated failures (iterable of ints).
+    """Elastic re-placement: hard device failures, soft derates, or both.
 
-    Returns a placement over the SURVIVING device indices of the *original*
-    cluster (so the executor can keep its device handles)."""
+    Args:
+        graph: the computation graph to (re-)place.
+        cluster: the ORIGINAL cluster spec — never mutated.
+        failed_device: one failed device index (int), an iterable of
+            accumulated failures, or empty (the default) for a derate-only
+            replan. Failed devices are removed from the planning cluster.
+        config: planning knobs (objective, method, slots — see
+            :class:`PlanConfig`); the replan runs under the SAME configured
+            objective as the original plan.
+        derate: optional map of device index → observed speed factor
+            (1.0 = nominal, 0.5 = running at half speed). The plan is
+            computed on ``cluster.with_derate(derate)`` — the cluster as it
+            is actually behaving — closing the serving engine's
+            observe → derate → replan loop. Indices are ORIGINAL cluster
+            indices; derates for failed devices are ignored.
+
+    Returns:
+        A :class:`PlacementResult` whose placement maps node ids to
+        SURVIVING device indices of the *original* cluster (so the executor
+        can keep its device handles). ``extra`` records
+        ``failed_devices`` and, when given, the applied ``derate`` map.
+    """
     failed = (
         [failed_device]
         if isinstance(failed_device, int)
@@ -300,13 +383,21 @@ def replan(
     surviving = [i for i in range(cluster.k) if i not in failed]
     if not surviving:
         raise ValueError("no surviving devices to re-plan on")
-    # remove in descending index order so earlier indices stay stable
-    sub = cluster
+    derate = {
+        i: float(f)
+        for i, f in (derate or {}).items()
+        if i not in failed and float(f) != 1.0
+    }
+    # plan on the cluster as observed: derated speeds, minus failed devices
+    # (remove in descending index order so earlier indices stay stable)
+    sub = cluster.with_derate(derate) if derate else cluster
     for i in sorted(failed, reverse=True):
         sub = sub.without_device(i)
     res = plan(graph, sub, config)
     res.placement = {nid: surviving[k] for nid, k in res.placement.items()}
     res.extra["failed_devices"] = failed
+    if derate:
+        res.extra["derate"] = dict(derate)
     if len(failed) == 1:
         res.extra["failed_device"] = failed[0]
     return res

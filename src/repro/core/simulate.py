@@ -109,11 +109,16 @@ def _device_busy(schedule: Mapping, k: int) -> float:
 
 @dataclass
 class SimResult:
+    """Single-query simulation outcome: the makespan (paper Eq. 4 objective),
+    the full per-task schedule (op and comm :class:`TaskRecord` entries,
+    keyed by task id), and the augmented DAG the tasks refer to."""
+
     makespan: float
     schedule: Dict[int, TaskRecord]
     aug: AugmentedDAG
 
     def device_busy(self, k: int) -> float:
+        """Total busy seconds of device ``k`` in this schedule."""
         return _device_busy(self.schedule, k)
 
 
@@ -219,6 +224,11 @@ def validate_schedule(
     *,
     atol: float = 1e-9,
 ) -> None:
+    """Assert a simulated schedule obeys every MILP constraint family:
+    precedence through comm nodes (Eq. 4), valid device assignment, memory
+    (Eq. 5), per-device and per-channel non-overlap (Eqs. 6/8), and
+    zero-cost co-located flows (Eq. 7).  Raises ``AssertionError`` on the
+    first violation (used by property tests and the solver self-check)."""
     sched = result.schedule
     aug = result.aug
 

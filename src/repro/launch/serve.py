@@ -2,6 +2,12 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
         --requests 8 --method moirai
+
+The engine runs with the adaptive observe → derate → replan loop closed
+(an observation window every ``--adapt-every`` decode steps; ``0`` disables
+it).  After the run the CLI prints the straggler report, every adaptation
+decision the policy logged, and every committed replan (hot-swap) with its
+derate map — the operator-facing view of the loop.
 """
 
 from __future__ import annotations
@@ -15,6 +21,7 @@ from repro.configs import get_config
 from repro.core.devices import tpu_slice_cluster
 from repro.core.placement import PlanConfig
 from repro.models.model import build_model
+from repro.serving.adaptation import AdaptationConfig
 from repro.serving.engine import Request, ServingEngine
 
 
@@ -28,6 +35,15 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--method", default="moirai")
     ap.add_argument("--heterogeneous", action="store_true", default=True)
+    ap.add_argument(
+        "--adapt-every", type=int, default=16,
+        help="decode steps per adaptation observation window (0 = off; "
+        "short windows lower the per-window evidence requirement to match)",
+    )
+    ap.add_argument(
+        "--admission", choices=("queue", "reject"), default="queue",
+        help="KV-aware admission: hold requests in queue or reject them",
+    )
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -43,10 +59,20 @@ def main(argv=None):
         slots=args.slots, max_len=args.max_len,
         plan_cfg=PlanConfig(method=args.method, time_limit=20, mip_rel_gap=0.05),
         eos_id=-1,
+        # short windows can't carry the default 4-sample evidence minimum —
+        # scale it down so --adapt-every 1..3 still observes (and acts)
+        adapt=AdaptationConfig(
+            window_steps=args.adapt_every,
+            min_samples=(
+                min(4, args.adapt_every) if args.adapt_every > 0 else 4
+            ),
+        ),
+        admission=args.admission,
     )
     print(
         f"[serve] {args.arch}: placement={engine.placement_result.method} "
-        f"stages={len(engine.executor.stages)} devices={len(engine.devices)}"
+        f"stages={len(engine.executor.stages)} devices={len(engine.devices)} "
+        f"adapt_every={args.adapt_every or 'off'}"
     )
     t0 = time.perf_counter()
     reqs = [
@@ -58,8 +84,29 @@ def main(argv=None):
     engine.run_until_drained()
     dt = time.perf_counter() - t0
     toks = sum(len(r.out_tokens) for r in reqs)
-    print(f"[serve] {toks} tokens in {dt:.2f}s ({toks/dt:.1f} tok/s)")
+    rejected = sum(r.rejected for r in reqs)
+    print(f"[serve] {toks} tokens in {dt:.2f}s ({toks/dt:.1f} tok/s)"
+          + (f", {rejected} rejected by KV admission" if rejected else ""))
     print(f"[serve] straggler report: {engine.straggler_report()['stragglers']}")
+
+    # ---- surface the adaptation loop's decisions -------------------------
+    print(
+        f"[adapt] windows={engine.policy.windows} "
+        f"derate={engine.derate or '{}'} "
+        f"events={len(engine.adaptation_events)}"
+    )
+    for ev in engine.adaptation_events:
+        dev = "cluster" if ev.device < 0 else f"dev{ev.device}"
+        print(
+            f"[adapt]   w{ev.window:<3d} {ev.action:<8s} {dev:<8s}"
+            f" ratio={ev.ratio:6.2f} factor {ev.old_factor:.3f}→{ev.new_factor:.3f}"
+            f"  {ev.reason}"
+        )
+    for h in engine.replan_history:
+        print(
+            f"[adapt] replan (w{h['window']}): {h['reason']} — "
+            f"method={h['method']} stages={h['stages']} derate={h['derate']}"
+        )
 
 
 if __name__ == "__main__":

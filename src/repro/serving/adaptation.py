@@ -1,0 +1,296 @@
+"""Adaptive-serving derate policy: observe → derate → replan, closed.
+
+Moirai's placements come from a static cost model, but the premise of the
+paper — heterogeneous devices with divergent effective speeds — means the
+cluster the engine *observes* drifts from the cluster it *planned* for
+(thermal throttling, co-tenant contention, a slow NIC…).  RL placers
+(Placeto, Mirhoseini et al.) absorb drift by re-measuring real step times
+every episode; MILP placers assume profiled costs hold.  This module lets
+the repo keep the MILP's optimality while tracking reality: the serving
+engine feeds per-device observed/predicted time ratios into a
+:class:`DeratePolicy`, which decides when the evidence justifies cloning the
+cluster with scaled device speeds (``ClusterSpec.with_derate``) and
+re-planning under the configured objective.
+
+The control loop, per observation window::
+
+      executor stage times ──► straggler ratios ──► DerateCalibrator
+                                                         │ per-device ratio
+          replan(derate) ◄── new factor map ◄──── DeratePolicy.observe()
+
+Stability comes from three mechanisms:
+
+* **confirmation streaks** — a device must run out-of-band for
+  ``confirm_windows`` (derate) / ``recover_windows`` (un-derate)
+  *consecutive* windows before any action; transient noise resets the
+  streak;
+* **log-space EMA smoothing** — the applied factor divides by the smoothed
+  ratio, not the latest sample, so a single spiky window cannot swing the
+  model; successive derates converge geometrically onto the true speed;
+* **a hysteresis deadband** — a proposed factor within ``hysteresis``
+  (relative) of the current one is recorded as a ``hold`` and NOT applied,
+  so ratios oscillating around the operating point never trigger replan
+  churn.
+
+Because the engine rebuilds its cost model from the derated cluster after
+every replan, a correctly derated device's subsequent ratios return to ~1.0
+— which is exactly the policy's fixed point.  Recovery is the same rule run
+backwards: a derated device observed *faster* than its derated model
+(ratio < ``recover_ratio``) for ``recover_windows`` windows gets its factor
+raised (capped at 1.0), un-derating it.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional
+
+# decision/replan logs keep only this many recent entries (long-lived
+# engines must not grow memory with uptime)
+EVENT_LOG_KEEP = 4096
+
+
+@dataclass(frozen=True)
+class AdaptationConfig:
+    """Knobs of the adaptive derate loop.
+
+    Fields
+    ------
+    window_steps:
+        Engine decode steps per observation window; every ``window_steps``
+        steps the engine closes a window and runs the policy.  ``0`` (the
+        default) disables automatic windows — observation happens only when
+        ``ServingEngine.observe_window`` is called explicitly.
+    trigger_ratio:
+        A device whose fleet-normalized observed/predicted ratio is at or
+        above this counts toward its derate confirmation streak (1.5 =
+        "50% slower than the model says").
+    confirm_windows:
+        Consecutive out-of-band windows required before a derate is applied
+        (the ISSUE's K).
+    recover_ratio:
+        A *derated* device observed at or below this ratio (faster than its
+        derated model predicts) counts toward its recovery streak.
+    recover_windows:
+        Consecutive in-recovery windows required before the factor is
+        raised back toward 1.0.
+    hysteresis:
+        Relative deadband: a proposed factor within ``hysteresis`` of the
+        current factor is held, not applied — oscillating derates converge
+        instead of thrashing replans.
+    smoothing:
+        EMA weight (in log space) on the newest window's ratio; 1.0 trusts
+        each window fully, smaller values average over the streak.
+    min_derate:
+        Floor on any device's speed factor (a device is never modeled
+        slower than ``min_derate``× nominal; below that, fail it instead).
+    min_samples:
+        Minimum observed stage samples inside a window for that stage to
+        contribute evidence.
+    """
+
+    window_steps: int = 0
+    trigger_ratio: float = 1.5
+    confirm_windows: int = 2
+    recover_ratio: float = 0.8
+    recover_windows: int = 2
+    hysteresis: float = 0.15
+    smoothing: float = 0.7
+    min_derate: float = 0.05
+    min_samples: int = 4
+
+    def __post_init__(self):
+        if self.trigger_ratio <= 1.0:
+            raise ValueError("trigger_ratio must be > 1")
+        if not 0.0 < self.recover_ratio < 1.0:
+            raise ValueError("recover_ratio must be in (0, 1)")
+        if self.confirm_windows < 1 or self.recover_windows < 1:
+            raise ValueError("confirmation windows must be >= 1")
+        if not 0.0 < self.smoothing <= 1.0:
+            raise ValueError("smoothing must be in (0, 1]")
+        if not 0.0 < self.min_derate <= 1.0:
+            raise ValueError("min_derate must be in (0, 1]")
+        if self.hysteresis < 0.0:
+            raise ValueError("hysteresis must be >= 0")
+        if self.min_samples < 1:
+            raise ValueError("min_samples must be >= 1")
+        if self.window_steps < 0:
+            raise ValueError("window_steps must be >= 0 (0 disables auto windows)")
+        if 0 < self.window_steps < self.min_samples:
+            # every auto-closed window would drain fewer than min_samples
+            # stage samples, so the evidence filter would silently discard
+            # every window — adaptation would look on but never act
+            raise ValueError(
+                f"window_steps={self.window_steps} < min_samples="
+                f"{self.min_samples}: automatic windows would never carry "
+                "enough samples to act on; raise window_steps or lower "
+                "min_samples"
+            )
+
+
+@dataclass
+class AdaptationEvent:
+    """One entry of the adaptation decision log.
+
+    ``action`` is one of ``"derate"`` (factor lowered), ``"underate"``
+    (factor raised toward 1.0 on recovery), ``"hold"`` (streak confirmed
+    but the proposed factor fell inside the hysteresis deadband), or
+    ``"replan"`` (a window's accepted factor changes were committed and a
+    re-placement was requested).  ``device`` is -1 for cluster-wide events
+    (replan).  ``ratio`` is the fleet-normalized observed/predicted ratio
+    that drove the decision.
+    """
+
+    window: int
+    device: int
+    action: str
+    ratio: float = float("nan")
+    old_factor: float = 1.0
+    new_factor: float = 1.0
+    reason: str = ""
+
+
+class DeratePolicy:
+    """Streak/hysteresis controller mapping window ratios to derate maps.
+
+    Feed one :meth:`observe` call per observation window with the
+    fleet-normalized observed/predicted ratio of every device seen that
+    window.  The return value is ``None`` ("keep serving, no replan") or a
+    complete device → speed-factor map to re-plan with.  Every decision —
+    including holds — is appended to :attr:`events` (bounded to the most
+    recent :data:`EVENT_LOG_KEEP` entries so a long-lived engine cannot
+    accumulate an unbounded log).
+    """
+
+    def __init__(self, config: Optional[AdaptationConfig] = None):
+        self.config = config or AdaptationConfig()
+        self.factors: Dict[int, float] = {}   # device -> current speed factor
+        self.events: List[AdaptationEvent] = []
+        self.windows = 0
+        self._ema: Dict[int, float] = {}      # device -> log-space EMA of ratio
+        self._hi: Dict[int, int] = {}         # consecutive slow windows
+        self._lo: Dict[int, int] = {}         # consecutive recovered windows
+
+    # ------------------------------------------------------------------
+    def _log(self, event: AdaptationEvent) -> None:
+        self.events.append(event)
+        if len(self.events) > EVENT_LOG_KEEP:
+            del self.events[: len(self.events) - EVENT_LOG_KEEP]
+
+    # ------------------------------------------------------------------
+    def factor(self, device: int) -> float:
+        """Current modeled speed factor of ``device`` (1.0 = nominal)."""
+        return self.factors.get(device, 1.0)
+
+    def derate_map(self) -> Dict[int, float]:
+        """Devices currently modeled below nominal speed ({} when none)."""
+        return {d: f for d, f in self.factors.items() if f < 1.0}
+
+    def forget(self, device: int) -> None:
+        """Drop all state for ``device`` (factor, EMA, streaks) — called
+        when the device leaves the cluster (hard failure), so later commits
+        cannot resurrect its derate."""
+        self.factors.pop(device, None)
+        self._ema.pop(device, None)
+        self._hi.pop(device, None)
+        self._lo.pop(device, None)
+
+    # ------------------------------------------------------------------
+    def observe(self, ratios: Mapping[int, float]) -> Optional[Dict[int, float]]:
+        """Close one observation window.
+
+        Args:
+            ratios: device index → fleet-normalized observed/predicted time
+                ratio for this window (1.0 = device behaves exactly as the
+                *current* — possibly already derated — cost model predicts).
+                Non-finite / non-positive entries are ignored; devices
+                absent from the map keep their streaks (no evidence ≠
+                counter-evidence).
+
+        Returns:
+            ``None`` when no model change is warranted, else the complete
+            derate map (device → factor, only devices below nominal) to
+            re-plan the cluster with.  Callers must treat a non-``None``
+            return as "the cost model changed": re-plan, rebuild
+            predictions, and keep feeding windows.
+        """
+        cfg = self.config
+        self.windows += 1
+        changed: Dict[int, float] = {}
+        for dev, ratio in sorted(ratios.items()):
+            if not (ratio > 0.0 and math.isfinite(ratio)):
+                continue
+            cur = self.factors.get(dev, 1.0)
+            ema_prev = self._ema.get(dev)
+            log_r = math.log(ratio)
+            ema = (
+                log_r
+                if ema_prev is None
+                else cfg.smoothing * log_r + (1.0 - cfg.smoothing) * ema_prev
+            )
+            self._ema[dev] = ema
+
+            if ratio >= cfg.trigger_ratio:
+                self._hi[dev] = self._hi.get(dev, 0) + 1
+                self._lo[dev] = 0
+            elif cur < 1.0 and ratio <= cfg.recover_ratio:
+                self._lo[dev] = self._lo.get(dev, 0) + 1
+                self._hi[dev] = 0
+            else:
+                self._hi[dev] = 0
+                self._lo[dev] = 0
+                continue
+
+            slow = self._hi.get(dev, 0) >= cfg.confirm_windows
+            recovered = self._lo.get(dev, 0) >= cfg.recover_windows
+            if not (slow or recovered):
+                continue
+            proposed = min(1.0, max(cfg.min_derate, cur / math.exp(ema)))
+            # direction clamp: the EMA may carry samples from before the
+            # streak flipped (e.g. one unconfirmed spike right before a
+            # genuine recovery) — a confirmed-slow commit must never RAISE
+            # the factor, a confirmed-recovery commit must never LOWER it
+            proposed = min(proposed, cur) if slow else max(proposed, cur)
+            if proposed * (1.0 + cfg.hysteresis) >= 1.0:
+                # within the deadband of nominal: fully un-derate rather
+                # than carrying a ~1.0 factor (and its replans) forever
+                proposed = 1.0
+            if abs(math.log(max(proposed, 1e-12) / cur)) < math.log1p(cfg.hysteresis):
+                self._log(AdaptationEvent(
+                    window=self.windows, device=dev, action="hold",
+                    ratio=ratio, old_factor=cur, new_factor=cur,
+                    reason="proposed factor inside hysteresis deadband",
+                ))
+                self._hi[dev] = 0
+                self._lo[dev] = 0
+                continue
+            self._log(AdaptationEvent(
+                window=self.windows, device=dev,
+                action="derate" if slow else "underate",
+                ratio=ratio, old_factor=cur, new_factor=proposed,
+                reason=(
+                    f"{self._hi.get(dev, 0)} consecutive windows >= "
+                    f"{cfg.trigger_ratio}x"
+                    if slow
+                    else f"{self._lo.get(dev, 0)} consecutive windows <= "
+                         f"{cfg.recover_ratio}x"
+                ),
+            ))
+            changed[dev] = proposed
+
+        if not changed:
+            return None
+        for dev, f in changed.items():
+            self.factors[dev] = f
+            # the model just moved under this device: stale evidence is void
+            self._ema.pop(dev, None)
+            self._hi[dev] = 0
+            self._lo[dev] = 0
+        new_map = self.derate_map()
+        self._log(AdaptationEvent(
+            window=self.windows, device=-1, action="replan",
+            reason=f"committed factors for devices {sorted(changed)}; "
+                   f"derate map now {new_map}",
+        ))
+        return new_map

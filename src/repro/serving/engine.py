@@ -13,38 +13,94 @@
   placement; a stage running ``straggler_factor``× slower than its
   prediction (normalized by the leave-one-out median of the other stages'
   observed/predicted ratios, so absolute cost-model error cancels) is
-  flagged and (policy) triggers re-planning with that device derated.
+  flagged,
+* **closed adaptation loop** (observe → derate → replan): every
+  ``AdaptationConfig.window_steps`` decode steps (or on an explicit
+  :meth:`ServingEngine.observe_window` call) the engine converts the
+  window's stage ratios into per-device speed evidence
+  (:class:`~repro.core.costmodel.DerateCalibrator`), feeds the
+  :class:`~repro.serving.adaptation.DeratePolicy`, and — when the policy's
+  streak/hysteresis machinery commits a change — clones the cluster with
+  the observed speeds (``ClusterSpec.with_derate``), re-plans under the
+  configured objective (latency or throughput, KV-aware Eq. 5 intact) via
+  ``replan(..., derate=...)``, and hot-swaps the stage executor.  In-flight
+  requests are re-queued with their generated tokens intact (greedy decode
+  resumes exactly after re-prefill of prompt+output).  Every decision lands
+  in :attr:`ServingEngine.adaptation_events`; every committed swap in
+  :attr:`ServingEngine.replan_history`,
+* **KV-aware admission**: a request is only admitted when the KV-cache
+  residency of ``active+1`` concurrent sequences still fits every planned
+  device (runtime Eq. 5) — plan-time ``serving_slots`` sizing is necessary
+  but not sufficient after failures/derates shrink the effective cluster.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.costmodel import CostModel
+from repro.core.costmodel import CostModel, DerateCalibrator
 from repro.core.devices import ClusterSpec
 from repro.core.modelgraph import transformer_graph
 from repro.core.placement import PlanConfig, plan, replan
+from .adaptation import AdaptationConfig, AdaptationEvent, DeratePolicy
 from .stage_executor import StageExecutor, stages_from_placement, stats_from_times
 
 
 @dataclass
 class Request:
+    """One generation request.
+
+    ``prompt`` is the token list to prefill; generation appends to
+    ``out_tokens`` until ``max_new_tokens``, EOS, or the engine's
+    ``max_len``.  ``done`` flips when the request reaches ANY terminal
+    state; ``rejected`` additionally flips (with ``out_tokens`` left
+    empty) when KV-aware admission (``admission="reject"``) turned the
+    request away — check it before reading ``out_tokens``.
+    """
+
     rid: int
     prompt: List[int]
     max_new_tokens: int = 16
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
+    rejected: bool = False
 
 
 class ServingEngine:
+    """Continuous-batching engine over a Moirai-placed stage pipeline.
+
+    Args:
+        cfg: model configuration (must have per-layer params,
+            ``scan_layers=False``).
+        params: model parameters (placed onto stage devices at build).
+        cluster: the nominal :class:`ClusterSpec` the planner sees; the
+            engine never mutates it — observed drift lives in
+            :attr:`derate` / :attr:`cluster_effective`.
+        devices: jax devices backing the cluster's indices (default:
+            ``jax.devices()``, reused modulo its length).
+        slots: concurrent decode slots (continuous batching width); also
+            threaded into planning as ``PlanConfig.serving_slots``.
+        max_len: KV-cache capacity per slot (prompt + generated tokens).
+        plan_cfg: planning knobs; ``None`` selects the engine default
+            (throughput objective when ``slots > 1``, else latency).
+        eos_id: token id that retires a sequence (-1 disables).
+        straggler_factor: flag threshold for :meth:`straggler_report`.
+        adapt: :class:`AdaptationConfig` for the observe → derate → replan
+            loop; ``None`` uses the defaults (manual windows only — set
+            ``window_steps > 0`` to close the loop automatically).
+        admission: ``"queue"`` (default) holds requests in the queue while
+            their KV residency would overflow a planned device;
+            ``"reject"`` retires them immediately with ``rejected=True``.
+    """
+
     def __init__(
         self,
         cfg: ModelConfig,
@@ -57,6 +113,8 @@ class ServingEngine:
         plan_cfg: Optional[PlanConfig] = None,
         eos_id: int = 0,
         straggler_factor: float = 4.0,
+        adapt: Optional[AdaptationConfig] = None,
+        admission: str = "queue",
     ):
         self.cfg = cfg
         self.params = params
@@ -66,6 +124,9 @@ class ServingEngine:
         self.max_len = max_len
         self.eos_id = eos_id
         self.straggler_factor = straggler_factor
+        if admission not in ("queue", "reject"):
+            raise ValueError(f"admission must be 'queue' or 'reject', got {admission!r}")
+        self.admission = admission
         # serving >1 slot is a pipelined workload: optimize steady-state
         # throughput (bottleneck-stage time), not single-query makespan, and
         # charge Eq. 5 one resident KV-cache copy per slot so the planner
@@ -85,17 +146,36 @@ class ServingEngine:
             plan_cfg = dataclasses.replace(plan_cfg, serving_slots=slots)
         self.plan_cfg = plan_cfg
 
+        # adaptation loop state: the policy owns streaks/hysteresis, the
+        # engine owns the applied derate map and the (derated) cost model
+        self.policy = DeratePolicy(adapt)
+        self.derate: Dict[int, float] = {}
+        self.cluster_effective: ClusterSpec = cluster
+        self.replan_history: List[Dict[str, Any]] = []
+        self._steps_since_window = 0
+
         self.graph = transformer_graph(cfg, seq_len=max_len, granularity="block")
         self._cost = CostModel(cluster)
         self.placement_result = plan(self.graph, cluster, self.plan_cfg)
         self._build_executor(self.placement_result.placement)
 
         self.queue: List[Request] = []
+        # recent terminal requests (bounded — a long-lived engine must not
+        # retain every historical request's token lists forever)
+        self.finished: Deque[Request] = deque(maxlen=4096)
+        self._finish_sink: Optional[List[Request]] = None
         self.active: List[Optional[Request]] = [None] * slots
         self.slot_pos = np.zeros(slots, dtype=np.int64)
         self.caches = None
         self.failed_devices: List[int] = []
         self._devices_all: Optional[List[Any]] = None  # pre-failure jax devices
+
+    # ------------------------------------------------------------------
+    @property
+    def adaptation_events(self) -> List[AdaptationEvent]:
+        """Chronological log of every adaptation decision (derate,
+        underate, hold, replan) made by the policy."""
+        return self.policy.events
 
     # ------------------------------------------------------------------
     def _build_executor(self, placement: Dict[int, int]):
@@ -105,23 +185,96 @@ class ServingEngine:
         self.executor = StageExecutor(self.cfg, self.params, stages)
         self.caches = None  # caches are invalid after a topology change
         self._pred_stage_s = self._predict_stage_times()
+        # per-stage op-class weights are fixed between rebuilds — compute
+        # once, not every observation window
+        self._stage_classes = [
+            self._stage_class_weights(i) for i in range(len(stages))
+        ]
+        # whole-run observation history for reporting (windows DRAIN the
+        # executor's recorders; straggler_report must still see the run)
+        self._observed_history: List[Deque[float]] = [
+            deque(maxlen=4096) for _ in stages
+        ]
+        # KV-aware admission width: memory_ok is monotone in serving_slots,
+        # and the placement only changes on rebuild — resolve the max
+        # feasible in-flight count ONCE here so per-step admission is an
+        # integer compare, not an O(nodes) memory scan
+        self._max_in_flight = 0
+        for n in range(self.slots, 0, -1):
+            if self._cost.memory_ok(
+                self.graph, self.placement_result.placement, serving_slots=n
+            ):
+                self._max_in_flight = n
+                break
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
+        """Enqueue a request; admission happens on the next :meth:`step`."""
         self.queue.append(req)
+
+    def _admission_ok(self, n_in_flight: int) -> bool:
+        """Runtime Eq. 5: does the KV residency of ``n_in_flight``
+        concurrent sequences still fit every planned device?
+
+        Plan-time ``serving_slots`` sizing guarantees this for the ORIGINAL
+        plan at full concurrency, but failures and derate-replans can land
+        on placements where the envelope's best feasible candidate still
+        overflows at ``slots``-wide concurrency — admission then caps the
+        effective width instead of OOMing a device.  (The width is resolved
+        once per rebuild — see ``_build_executor`` — so this is an integer
+        compare on the decode path.)"""
+        return n_in_flight <= max(self._max_in_flight, 0)
 
     def _admit(self):
         for slot in range(self.slots):
             if self.active[slot] is None and self.queue:
+                n_active = sum(r is not None for r in self.active)
+                # lockstep cohort check: batched decode shares one cache
+                # position across slots, so a request may only join a batch
+                # whose active slots sit at EXACTLY its resume depth
+                # (prompt + generated).  Unequal-depth requests — mixed
+                # prompt lengths, or hot-swap re-queues of sequences that
+                # were at different depths — wait for the wave to drain
+                # instead of silently corrupting the laggard's KV rows.
+                pos_set = {
+                    int(self.slot_pos[i])
+                    for i, r in enumerate(self.active)
+                    if r is not None
+                }
+                depth = len(self.queue[0].prompt) + len(self.queue[0].out_tokens)
+                if pos_set and pos_set != {depth}:
+                    break
+                if n_active > 0 and not self._admission_ok(n_active + 1):
+                    # one more resident KV copy would overflow a planned
+                    # device. (With zero active requests we admit regardless:
+                    # if even one sequence does not fit, holding it forever
+                    # is a livelock, not protection — serve best-effort.)
+                    # A request with generated tokens was ALREADY admitted
+                    # once (re-queued by a hot-swap) — never reject it, or
+                    # accepted half-served work would be silently discarded
+                    if self.admission == "reject" and not self.queue[0].out_tokens:
+                        req = self.queue.pop(0)
+                        req.rejected = True
+                        req.done = True
+                        self._record_finished(req)
+                        continue
+                    break  # "queue": retry when a slot's KV frees
                 req = self.queue.pop(0)
                 self.active[slot] = req
-                # prefill this slot (batch-1 prefill into the slot's cache row)
-                toks = jnp.asarray([req.prompt], jnp.int32)
+                # prefill this slot (batch-1 prefill into the slot's cache
+                # row).  prompt + out_tokens so a request re-queued by a
+                # hot-swap resumes its greedy decode exactly where it was
+                toks_list = list(req.prompt) + list(req.out_tokens)
+                toks = jnp.asarray([toks_list], jnp.int32)
                 logits, slot_caches = self._prefill_slot(toks)
                 nxt = int(jnp.argmax(logits[0, -1]))
                 req.out_tokens.append(nxt)
                 self._write_slot_cache(slot, slot_caches)
-                self.slot_pos[slot] = len(req.prompt)
+                self.slot_pos[slot] = len(toks_list)
+                # the prefill-produced token can itself finish the request
+                # (EOS, or a re-queued request one token short of budget) —
+                # retire NOW or a decode step would overshoot the budget
+                self._maybe_retire(slot, nxt)
 
     def _prefill_slot(self, toks):
         caches = self.executor.init_caches(1, self.max_len)
@@ -139,9 +292,42 @@ class ServingEngine:
                     )
 
     # ------------------------------------------------------------------
+    def _record_finished(self, req: Request):
+        """Log a terminal request: into the bounded :attr:`finished` ring
+        and, when a ``run_until_drained`` call is active, its return list."""
+        self.finished.append(req)
+        if self._finish_sink is not None:
+            self._finish_sink.append(req)
+
+    def _maybe_retire(self, slot: int, last_token: int) -> bool:
+        """Retire the request in ``slot`` if ``last_token`` finished it
+        (EOS, token budget, or cache capacity); frees the slot and records
+        the request in :attr:`finished`.  Returns True when retired."""
+        req = self.active[slot]
+        if req is None:
+            return False
+        if (
+            last_token == self.eos_id
+            or len(req.out_tokens) >= req.max_new_tokens
+            or self.slot_pos[slot] >= self.max_len - 1
+        ):
+            req.done = True
+            self.active[slot] = None
+            self._record_finished(req)
+            return True
+        return False
+
     def step(self) -> int:
-        """One engine iteration: admit → batched decode → retire. Returns
-        number of active sequences."""
+        """One engine iteration: admit → batched decode → retire →
+        (possibly) close an observation window.  Returns the number of
+        active sequences decoded this step.
+
+        Batched decode shares one ``cache_pos`` across slots (seed-engine
+        design), so admission enforces lockstep cohorts: a request joins a
+        non-empty batch only at exactly the batch's current position (see
+        ``_admit``), and unequal-depth requests serialize into waves.
+        Per-slot cache positions (ragged batches, full cross-depth
+        batching) are a ROADMAP follow-on."""
         self._admit()
         idx = [i for i, r in enumerate(self.active) if r is not None]
         if not idx:
@@ -160,40 +346,58 @@ class ServingEngine:
             req = self.active[i]
             req.out_tokens.append(int(nxt[i]))
             self.slot_pos[i] += 1
-            if (
-                int(nxt[i]) == self.eos_id
-                or len(req.out_tokens) >= req.max_new_tokens
-                or self.slot_pos[i] >= self.max_len - 1
-            ):
-                req.done = True
-                self.active[i] = None
+            self._maybe_retire(i, int(nxt[i]))
+        # closed loop: every window_steps decode steps, observe and adapt
+        ws = self.policy.config.window_steps
+        if ws > 0:
+            self._steps_since_window += 1
+            if self._steps_since_window >= ws:
+                self.observe_window()
         return len(idx)
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
-        finished: List[Request] = []
-        seen = set()
-        for _ in range(max_steps):
-            n = self.step()
-            if n == 0 and not self.queue:
-                break
-        return finished
+        """Step until the queue and all slots are empty (or ``max_steps``).
+
+        Returns the requests that reached a terminal state during THIS call
+        — served to completion, or turned away by ``admission="reject"``
+        (check ``Request.rejected``)."""
+        sink: List[Request] = []
+        self._finish_sink = sink
+        try:
+            for _ in range(max_steps):
+                n = self.step()
+                if n == 0 and not self.queue:
+                    break
+        finally:
+            self._finish_sink = None
+        return sink
 
     # ------------------------------------------------------------------
     # fault tolerance / elasticity
     # ------------------------------------------------------------------
-    def on_device_failure(self, device_idx: int):
-        """Re-plan on the surviving devices and rebuild stages (weights
-        migrate; in-flight sequences must be re-prefilled by the caller).
+    def _requeue_active(self):
+        """Move in-flight requests back to the queue front before a
+        hot-swap.  Their generated tokens are kept: on re-admission the
+        prefill covers prompt + out_tokens, so greedy decoding resumes
+        exactly where it stopped (caches are rebuilt, work is not lost)."""
+        pending = [r for r in self.active if r is not None]
+        self.active = [None] * self.slots
+        self.slot_pos = np.zeros(self.slots, dtype=np.int64)
+        self.queue[:0] = pending
 
-        ``device_idx`` is an ORIGINAL cluster index; repeated failures
-        accumulate — the re-plan always excludes every failed device, and
-        ``placement_result`` stays in original indices so the startup cost
-        model (and stage predictions) remain valid."""
-        if device_idx in self.failed_devices or not 0 <= device_idx < self.cluster.k:
-            raise ValueError(f"bad or already-failed device {device_idx}")
-        self.failed_devices.append(device_idx)
-        res = replan(self.graph, self.cluster, self.failed_devices, self.plan_cfg)
+    def _replan_and_rebuild(self, reason: str):
+        """Re-plan on the observed cluster (minus failures, with derates)
+        and hot-swap the executor; one path shared by failure handling and
+        the adaptation loop."""
+        res = replan(
+            self.graph, self.cluster, self.failed_devices, self.plan_cfg,
+            derate=self.derate,
+        )
         self.placement_result = res
+        self.cluster_effective = (
+            self.cluster.with_derate(self.derate) if self.derate else self.cluster
+        )
+        self._cost = CostModel(self.cluster_effective)
         alive = [i for i in range(self.cluster.k) if i not in self.failed_devices]
         # executor works over a compacted device list aligned with `alive`
         if self._devices_all is None:
@@ -202,16 +406,157 @@ class ServingEngine:
             self._devices_all[i % len(self._devices_all)] for i in alive
         ]
         remap = {orig: j for j, orig in enumerate(alive)}
+        self._requeue_active()
         self._build_executor({n: remap[k] for n, k in res.placement.items()})
+        if len(self.replan_history) >= 4096:  # bounded, like every other log
+            del self.replan_history[:-2048]
+        self.replan_history.append({
+            "reason": reason,
+            "window": self.policy.windows,
+            "failed_devices": list(self.failed_devices),
+            "derate": dict(self.derate),
+            "method": res.method,
+            "stages": len(self.executor.stages),
+        })
 
+    def on_device_failure(self, device_idx: int):
+        """Re-plan on the surviving devices and rebuild stages (weights
+        migrate; in-flight sequences are re-queued and resume after
+        re-prefill).
+
+        ``device_idx`` is an ORIGINAL cluster index; repeated failures
+        accumulate — the re-plan always excludes every failed device (and
+        keeps any active derates on the survivors), and ``placement_result``
+        stays in original indices so the startup cost model (and stage
+        predictions) remain valid."""
+        if device_idx in self.failed_devices or not 0 <= device_idx < self.cluster.k:
+            raise ValueError(f"bad or already-failed device {device_idx}")
+        self.failed_devices.append(device_idx)
+        # a dead device needs no derate — drop it from the applied map AND
+        # from the policy, or the next committed factor change would
+        # resurrect the dead device's derate into engine state
+        self.derate.pop(device_idx, None)
+        self.policy.forget(device_idx)
+        self._replan_and_rebuild(reason=f"device {device_idx} failed")
+
+    # ------------------------------------------------------------------
+    # adaptation loop: observe → derate → replan
+    # ------------------------------------------------------------------
+    def _stage_devices(self) -> List[int]:
+        """ORIGINAL-cluster device index hosting each executor stage."""
+        pl = self.placement_result.placement
+        return [pl[st.node_ids[0]] for st in self.executor.stages]
+
+    def _stage_class_weights(self, stage_idx: int) -> Dict[str, float]:
+        """Op class → predicted-time share of one stage (calibrator input)."""
+        pl = self.placement_result.placement
+        w: Dict[str, float] = {}
+        for n in self.executor.stages[stage_idx].node_ids:
+            node = self.graph.nodes[n]
+            w[node.op_type] = w.get(node.op_type, 0.0) + self._cost.compute_time(
+                node, pl[n]
+            )
+        return w
+
+    def _drain_window(self) -> List[List[float]]:
+        """Stage times recorded since the last window (the executor's
+        recorders reset; samples are retained in the bounded reporting
+        history) — each observation window sees only fresh samples."""
+        fresh = self.executor.drain_stage_times()
+        for hist, t in zip(self._observed_history, fresh):
+            hist.extend(t)
+        return fresh
+
+    def observe_window(
+        self, observed: Optional[List[List[float]]] = None
+    ) -> Dict[str, Any]:
+        """Close one observation window of the adaptation loop.
+
+        Converts the window's per-stage observed/predicted ratios into
+        per-device speed evidence (fleet-normalized with a leave-one-out
+        median so absolute cost-model error cancels, attributed across op
+        classes by the :class:`DerateCalibrator`), feeds the
+        :class:`DeratePolicy`, and — when the policy commits a factor
+        change — re-plans on the derated cluster and hot-swaps stages.
+
+        Args:
+            observed: per-stage lists of stage seconds overriding the
+                executor's recorded window (tests / external monitors);
+                ``None`` drains the executor's samples since the last
+                window.
+
+        Returns:
+            A summary dict: ``window`` (policy window count), ``ratios``
+            (device → normalized ratio observed this window), ``derate``
+            (the applied derate map after this window), ``replanned``
+            (whether a hot-swap happened), and ``stragglers`` (the flagged
+            stage indices of this window's report).
+        """
+        self._steps_since_window = 0
+        if observed is None:
+            observed = self._drain_window()
+        rep = self.straggler_report(observed=observed)
+        cfg = self.policy.config
+        stats = rep["stages"]
+        finite = {
+            i: s["obs_over_pred"]
+            for i, s in enumerate(stats)
+            if s["n"] >= cfg.min_samples and np.isfinite(s["obs_over_pred"])
+        }
+        devs = self._stage_devices()
+        cal = DerateCalibrator()
+        for i, r in finite.items():
+            # fleet baseline: ratios of stages on OTHER, NON-derated
+            # devices.  Leave-DEVICE-out (not just leave-stage-out): a slow
+            # device hosting several stages must not inflate its own
+            # baseline and shield itself from derating.  Derated devices
+            # are excluded too — a recovering (still-derated) device runs
+            # "fast" against its derated predictions, and letting it into a
+            # healthy device's baseline would make the healthy device look
+            # like a straggler (and ping-pong the derate between the two
+            # forever).  Only a stage ITSELF on a derated device may fall
+            # back to derated peers (so recovery still works when the whole
+            # fleet is derated); a device with no usable peers gets no
+            # evidence — like the single-stage case, it cannot be
+            # separated from absolute cost-model error.
+            others = [
+                v for j, v in finite.items()
+                if devs[j] != devs[i] and devs[j] not in self.derate
+            ]
+            if not others and devs[i] in self.derate:
+                others = [v for j, v in finite.items() if devs[j] != devs[i]]
+            if not others:
+                continue
+            baseline = float(np.median(others))
+            if baseline <= 0:
+                continue
+            cal.add_stage_sample(devs[i], r / baseline, self._stage_classes[i])
+        ratios = cal.device_ratios()
+        new_map = self.policy.observe(ratios)
+        replanned = False
+        if new_map is not None and new_map != self.derate:
+            self.derate = new_map
+            self._replan_and_rebuild(reason="adaptive derate")
+            replanned = True
+        return {
+            "window": self.policy.windows,
+            "ratios": ratios,
+            "derate": dict(self.derate),
+            "replanned": replanned,
+            "stragglers": rep["stragglers"],
+        }
+
+    # ------------------------------------------------------------------
     def _predict_stage_times(self) -> List[float]:
         """Simulator-predicted per-stage seconds for the current placement.
 
         Sum of cost-model compute times of each stage's graph nodes on their
         planned Moirai devices, plus the inter-stage activation transfer into
         the stage.  Placement indices are ORIGINAL cluster indices (kept so
-        by on_device_failure), so the startup CostModel stays valid after
-        any number of failures."""
+        by on_device_failure), so the cost model — rebuilt from the derated
+        cluster after every adaptation — stays valid after any number of
+        failures, and predictions track the OBSERVED device speeds: after a
+        correct derate, a slowed device's obs/pred ratio returns to ~1."""
         pl = self.placement_result.placement
         preds: List[float] = []
         prev_last: Optional[int] = None
@@ -245,12 +590,23 @@ class ServingEngine:
         What is flagged is a stage slow RELATIVE to what the placement says
         it should cost — a stage that legitimately owns more layers is not.
 
-        ``observed`` (per-stage lists of seconds) overrides the executor's
-        recorded latencies — used by tests and by external monitors."""
+        Args:
+            observed: per-stage lists of seconds overriding the executor's
+                recorded latencies — used by tests and by external monitors.
+
+        Returns:
+            A dict with ``stages`` (per-stage stats incl. ``predicted_s``
+            and ``obs_over_pred``), ``median_p95``, ``median_ratio``, and
+            the flagged ``stragglers`` stage indices.
+        """
         if observed is None:
-            stats = self.executor.stage_latency_stats()
-        else:
-            stats = [stats_from_times(times) for times in observed]
+            # whole-run view: drained window history + not-yet-drained
+            # executor samples (observation windows reset the recorders)
+            observed = [
+                list(h) + t
+                for h, t in zip(self._observed_history, self.executor.stage_times())
+            ]
+        stats = [stats_from_times(times) for times in observed]
         preds = self._pred_stage_s
         for i, s in enumerate(stats):
             # observed may outnumber predictions (e.g. a monitor still holding

@@ -19,6 +19,7 @@ weights migrate, caches are re-prefilled by the engine.
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -87,7 +88,11 @@ class StageExecutor:
         self.stages = stages
         self._windows = transformer._layer_windows(cfg)
         self._place_params(params)
-        self._stage_times: List[List[float]] = [[] for _ in stages]
+        # bounded: a long-lived executor must not retain every forward's
+        # timing forever (the adaptation loop drains these per window anyway)
+        self._stage_times: List[deque] = [
+            deque(maxlen=4096) for _ in stages
+        ]
         self._fns: Dict[int, Callable] = {}
 
     # ------------------------------------------------------------------
@@ -190,7 +195,26 @@ class StageExecutor:
 
     # stage latency stats (straggler detection feed)
     def stage_latency_stats(self) -> List[Dict[str, float]]:
+        """mean/p95/n summary per stage over the RETAINED forward calls —
+        the recorder is a bounded ring (most recent 4096 per stage) that
+        observation windows also drain; the engine's ``straggler_report``
+        keeps its own whole-run history."""
         return [stats_from_times(times) for times in self._stage_times]
+
+    def stage_times(self) -> List[List[float]]:
+        """Per-stage wall-clock seconds of recent forward calls (bounded
+        ring, most recent last; copies — mutating the return value cannot
+        corrupt the recorder)."""
+        return [list(t) for t in self._stage_times]
+
+    def drain_stage_times(self) -> List[List[float]]:
+        """Return the recorded per-stage times and RESET the recorders —
+        each call yields only the samples since the previous drain (the
+        engine's observation windows)."""
+        out = [list(t) for t in self._stage_times]
+        for t in self._stage_times:
+            t.clear()
+        return out
 
 
 def stats_from_times(times: Sequence[float]) -> Dict[str, float]:
