@@ -28,6 +28,11 @@ from __future__ import annotations
 
 from typing import Dict, List
 
+try:
+    from common import write_bench_json   # run directly: python benchmarks/x.py
+except ImportError:  # imported as a package module (benchmarks.run)
+    from .common import write_bench_json
+
 from repro.configs import get_config
 from repro.core.costmodel import CostModel
 from repro.core.devices import tpu_slice_cluster
@@ -161,6 +166,7 @@ def main() -> None:
     print("\n# CSV (name,us_per_call,derived)")
     for line in csv:
         print(line)
+    write_bench_json("adaptive_derate", m)
     assert m["recovered"] >= 1.3, (
         f"adaptive engine must recover >= 1.3x static steady req/s after the "
         f"injected slowdown; got {m['recovered']:.2f}x"

@@ -1,10 +1,15 @@
-"""Shared benchmark plumbing: instances, planners, simulator evaluation."""
+"""Shared benchmark plumbing: instances, planners, simulator evaluation,
+and the ``BENCH_*.json`` result files the nightly CI uploads as artifacts
+(one JSON per benchmark run, so the perf trajectory is tracked across
+runs)."""
 
 from __future__ import annotations
 
+import json
+import os
 import time
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Mapping, Optional
 
 from repro.core.costmodel import CostModel
 from repro.core.devices import ClusterSpec, inter_server_cluster, intra_server_cluster
@@ -26,6 +31,28 @@ SCENARIOS: Dict[str, Callable[[], ClusterSpec]] = {
     "inter-server": inter_server_cluster,
     "intra-server": intra_server_cluster,
 }
+
+
+def write_bench_json(name: str, metrics: Mapping[str, Any]) -> str:
+    """Write one benchmark's metrics to ``BENCH_<name>.json``.
+
+    The file lands in ``$BENCH_JSON_DIR`` (default: current directory) and
+    is what the nightly CI job uploads as a workflow artifact — keep the
+    payload to JSON scalars / dicts / lists so runs stay diffable.  Returns
+    the written path."""
+    out_dir = os.environ.get("BENCH_JSON_DIR", ".")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    payload = {
+        "bench": name,
+        "generated_unix": time.time(),
+        "metrics": dict(metrics),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path}")
+    return path
 
 
 @dataclass

@@ -38,6 +38,23 @@ DEFAULT_EFFICIENCY: Dict[str, float] = {
 
 DEFAULT_DISPATCH_OVERHEAD_S = 3e-6  # per-kernel launch overhead
 
+# Fraction of an op class's HBM traffic that is BATCH-INVARIANT (weights /
+# routing tables streamed once per batched step, not once per request).
+# Used by the batch-aware roofline when a node carries no ``param_bytes``
+# split (e.g. serial supernode members): batching a decode step multiplies
+# flops and activation bytes by the batch size but streams the invariant
+# bytes once, bending arithmetic intensity upward — the reason continuous
+# batching raises throughput on memory-bound decode in the first place.
+DEFAULT_BATCH_INVARIANT_FRAC: Dict[str, float] = {
+    "matmul": 0.95,     # decode GEMVs: weight-dominated traffic
+    "conv": 0.90,
+    "einsum": 0.60,     # attention einsums: KV streams per request
+    "ssd": 0.40,
+    "scan": 0.30,
+    "softmax": 0.0,     # pure activation traffic
+    "default": 0.50,
+}
+
 
 @dataclass
 class CostModel:
@@ -48,8 +65,13 @@ class CostModel:
     bytes/hbm_bw) + dispatch overhead`` — with per-op-class efficiencies
     (``efficiency``), an optional multiplicative per-device calibration
     (``device_scale``), and the cluster's widest-path channel model for
-    communication.  Build one per cluster *as observed*: the serving
-    engine's adaptation loop rebuilds its model from
+    communication.  ``compute_time(..., batch=n)`` gives the **batch-aware**
+    per-request cost: flops and activation bytes scale with the decode
+    batch while batch-invariant weight traffic is streamed once
+    (``batch_invariant_frac`` per op class, or the node's own
+    ``param_bytes``), bending arithmetic intensity the way continuous
+    batching actually does.  Build one per cluster *as observed*: the
+    serving engine's adaptation loop rebuilds its model from
     ``cluster.with_derate(...)`` so predictions track measured speeds."""
 
     cluster: ClusterSpec
@@ -57,6 +79,11 @@ class CostModel:
     dispatch_overhead_s: float = DEFAULT_DISPATCH_OVERHEAD_S
     # multiplicative per-device calibration (from profiling real lowerings)
     device_scale: Optional[np.ndarray] = None
+    # per-op-class share of HBM traffic streamed once per batched decode
+    # step (weights) rather than once per request — the batch-aware roofline
+    batch_invariant_frac: Mapping[str, float] = field(
+        default_factory=lambda: dict(DEFAULT_BATCH_INVARIANT_FRAC)
+    )
 
     def __post_init__(self):
         if self.device_scale is None:
@@ -70,8 +97,60 @@ class CostModel:
         effs = [self.efficiency.get(p, self.efficiency["default"]) for p in parts]
         return max(effs)
 
-    def compute_time(self, node: OpNode, device_idx: int) -> float:
-        """p_ik — processing time of ``node`` on device ``device_idx`` (s)."""
+    def _batch_invariant_frac(self, op_type: str) -> float:
+        parts = op_type.split("∘")
+        fracs = [
+            self.batch_invariant_frac.get(
+                p, self.batch_invariant_frac["default"]
+            )
+            for p in parts
+        ]
+        return max(fracs)
+
+    def _roofline(
+        self,
+        flops: float,
+        nbytes: float,
+        op_type: str,
+        dev: DeviceSpec,
+        batch: int,
+        param_bytes: Optional[float] = None,
+    ) -> float:
+        """Per-REQUEST roofline seconds of one op at decode batch ``batch``.
+
+        ``batch == 1`` reproduces the classic single-request roofline
+        bit-for-bit.  At ``batch > 1`` flops and activation bytes scale with
+        the batch while batch-invariant bytes (weights — ``param_bytes``
+        when the node carries the split, else the per-op-class
+        :data:`DEFAULT_BATCH_INVARIANT_FRAC` share) are streamed once; the
+        whole-batch time is then amortized over the batch.  Monotone: the
+        per-request time never increases with batch size, and saturates at
+        the flops roof (arithmetic intensity stops helping once the op
+        turns compute-bound)."""
+        eff = self._eff(op_type)
+        if batch <= 1:
+            t_f = flops / (dev.peak_flops * eff) if flops else 0.0
+            t_b = nbytes / dev.hbm_bw if nbytes else 0.0
+            return max(t_f, t_b) + self.dispatch_overhead_s
+        if param_bytes is not None and param_bytes > 0:
+            inv = min(float(param_bytes), nbytes)
+        else:
+            inv = nbytes * self._batch_invariant_frac(op_type)
+        act = max(nbytes - inv, 0.0)
+        t_f = batch * flops / (dev.peak_flops * eff) if flops else 0.0
+        t_b = (inv + batch * act) / dev.hbm_bw if nbytes else 0.0
+        return (max(t_f, t_b) + self.dispatch_overhead_s) / batch
+
+    def compute_time(
+        self, node: OpNode, device_idx: int, *, batch: int = 1
+    ) -> float:
+        """p_ik — processing time of ``node`` on device ``device_idx`` (s).
+
+        ``batch`` is the decode batch size (concurrently decoded serving
+        slots): the returned value is the amortized per-request time, with
+        batch-invariant weight traffic streamed once per batched step (the
+        batch-aware roofline — see :meth:`_roofline`).  ``batch=1`` is the
+        paper's single-request cost."""
         dev = self.cluster.devices[device_idx]
         serial = node.meta.get("serial") if node.meta else None
         if serial:
@@ -79,17 +158,13 @@ class CostModel:
             # the serial sum of per-member roofline maxima
             t = 0.0
             for flops, nbytes, op_type in serial:
-                eff = self._eff(op_type)
-                t_f = flops / (dev.peak_flops * eff) if flops else 0.0
-                t_b = nbytes / dev.hbm_bw if nbytes else 0.0
-                t += max(t_f, t_b) + self.dispatch_overhead_s
+                t += self._roofline(flops, nbytes, op_type, dev, batch)
             return t * float(self.device_scale[device_idx])
-        eff = self._eff(node.op_type)
-        t_flops = node.flops / (dev.peak_flops * eff) if node.flops else 0.0
-        t_bytes = node.bytes_accessed / dev.hbm_bw if node.bytes_accessed else 0.0
-        return (max(t_flops, t_bytes) + self.dispatch_overhead_s) * float(
-            self.device_scale[device_idx]
+        t = self._roofline(
+            node.flops, node.bytes_accessed, node.op_type, dev, batch,
+            param_bytes=node.param_bytes,
         )
+        return t * float(self.device_scale[device_idx])
 
     def compute_matrix(self, graph: OpGraph) -> Dict[int, np.ndarray]:
         """p_ik for all ops: node id -> [K] array of seconds."""
@@ -281,4 +356,5 @@ def calibrate_from_cost_analysis(
         efficiency=eff,
         dispatch_overhead_s=cm.dispatch_overhead_s,
         device_scale=cm.device_scale.copy(),
+        batch_invariant_frac=dict(cm.batch_invariant_frac),
     )

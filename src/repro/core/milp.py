@@ -123,6 +123,7 @@ def solve_placement(
     objective: str = "latency",
     serving_slots: int = 1,
     horizon: Optional[float] = None,
+    tighten_horizon: bool = True,
     verbose: bool = False,
 ) -> PlacementResult:
     """Solve the Moirai MILP for ``graph`` on ``cost.cluster``.
@@ -140,9 +141,19 @@ def solve_placement(
     ``T ≤ UB``; in latency mode it also caps the big-M horizon, which shrinks
     every disjunctive constraint's relaxation — an optimality-preserving
     beyond-paper speedup over the paper's sum-of-all-costs big-Ms.  In
-    throughput mode a bottleneck UB says nothing about the makespan, so the
-    horizon stays at the sum-of-costs bound unless ``horizon`` (a feasible
-    makespan in seconds) is passed explicitly.
+    throughput mode a bottleneck UB does not bound the makespan directly,
+    but (``tighten_horizon``) it bounds every RESOURCE's busy time: any
+    placement with bottleneck ≤ UB admits a list schedule no longer than the
+    sum of per-resource busy times — some resource is always running — so
+
+        H ≤ Σ_k min(UB, Σ_i p_ik) + Σ_{(k',k'')} min(UB, Σ_q p^comm_{q,k',k''})
+
+    is a valid **per-device / per-channel** horizon.  Each channel's term is
+    capped at UB individually (a single slow channel no longer inflates
+    every big-M the way the per-flow worst-channel sum did), which is where
+    the solve-time win comes from on heterogeneous-link clusters — measured
+    in ``benchmarks/milp_throughput.py``.  ``horizon`` (a feasible makespan
+    in seconds) can still be passed explicitly and composes via min.
 
     ``congestion_min_frac``: congestion (Eq. 8) pairs are built only for
     flows whose worst-channel transfer time exceeds this fraction of the
@@ -166,9 +177,13 @@ def solve_placement(
 
     # schedule horizon (valid big-M): a feasible UB if given, else every task
     # once at its worst cost
-    H_raw = sum(float(v.max()) for v in p.values()) + sum(
-        float(np.max(m)) if m.size else 0.0 for m in pcomm.values()
-    )
+    H_dev_loose = sum(float(v.max()) for v in p.values())
+    H_comm_loose = sum(float(np.max(m)) if m.size else 0.0 for m in pcomm.values())
+    H_raw = H_dev_loose + H_comm_loose
+    # congestion-pair significance is anchored to the STRUCTURAL bound, not
+    # the (possibly UB-tightened) horizon: a tighter horizon should shrink
+    # the big-M relaxations, never inflate the Eq. 8 pair set / model size
+    H_struct = max(H_raw, 1e-9)
     # 20% slack on caller-supplied bounds: T ≤ 1.2·UB still prunes the tree
     # hard, but leaves the solver's feasibility heuristics room to land a
     # first incumbent (scipy's milp cannot take a MIP start)
@@ -176,8 +191,37 @@ def solve_placement(
         H_raw = min(H_raw, horizon * 1.2)
     if upper_bound is not None and objective == "latency":
         # a makespan UB is also a valid schedule horizon; a bottleneck UB
-        # (throughput mode) is not — it only bounds T, below
+        # (throughput mode) only bounds T directly — but see below
         H_raw = min(H_raw, upper_bound * 1.2)
+    if upper_bound is not None and objective == "throughput" and tighten_horizon:
+        # per-channel big-M tightening: T ≤ UB caps EVERY resource's busy
+        # time, and a list schedule's makespan is at most the sum of busy
+        # times over all resources (at any instant before completion some
+        # resource is running).  Each device can contribute at most
+        # min(UB', Σ_i p_ik) and each directed channel at most
+        # min(UB', Σ_q pcomm[q][a,b]) — so one slow device (or channel) is
+        # capped at UB' instead of dragging the whole-schedule horizon with
+        # its worst-case per-task term.  Each part composes with its loose
+        # counterpart by min (a flow runs on exactly ONE channel, so the
+        # per-flow worst-channel sum stays valid too), making the tightened
+        # horizon never worse than the legacy bound.  UB' carries the same
+        # 20% slack as T's own bound so every incumbent the solver may
+        # explore still admits a schedule inside the horizon.
+        ub_s = upper_bound * 1.2
+        dev_caps = sum(
+            min(ub_s, float(sum(p[o][k] for o in ops))) for k in range(K)
+        )
+        chan_caps = 0.0
+        for a in range(K):
+            for bb in range(K):
+                if a == bb:
+                    continue
+                tot = float(sum(pcomm[q][a, bb] for q in comms if pcomm[q].size))
+                chan_caps += min(ub_s, tot)
+        H_raw = min(
+            H_raw,
+            min(H_dev_loose, dev_caps) + min(H_comm_loose, chan_caps),
+        )
     H_raw = max(H_raw, 1e-9)
     scale = 1e3 / H_raw  # rescale seconds so horizon ≈ 1e3
     for o in ops:
@@ -208,10 +252,11 @@ def solve_placement(
     ]
     aug_succ = aug.succ_closure()
     if congestion:
+        sig_thr = congestion_min_frac * H_struct * scale
         sig = {
             q
             for q in comms
-            if pcomm[q].size and float(np.max(pcomm[q])) >= congestion_min_frac * H
+            if pcomm[q].size and float(np.max(pcomm[q])) >= sig_thr
         }
         sig_list = sorted(sig)
         comm_pairs = [
@@ -414,6 +459,7 @@ def solve_placement(
                 "message": str(res.message),
                 "milp_objective": objective,
                 "serving_slots": serving_slots,
+                "horizon_s": H_raw,
             },
         )
 
@@ -449,5 +495,6 @@ def solve_placement(
             "n_comm_pairs": len(comm_pairs),
             "milp_objective": objective,
             "serving_slots": serving_slots,
+            "horizon_s": H_raw,
         },
     )

@@ -25,7 +25,11 @@ generalizes the event loop to N requests:
 
 * each request is an independent copy of the task graph (its own precedence
   edges), released when the request arrives (and, with ``max_in_flight``,
-  admitted only when a serving slot frees — continuous batching);
+  admitted only when a serving slot frees — continuous batching).  The
+  ``batching`` mode mirrors the serving engine: ``"ragged"`` refills a freed
+  slot immediately (per-slot cache positions), ``"lockstep"`` admits cohort
+  waves that must fully drain first (the seed engine's shared-position
+  constraint); ``decode_batch`` scores ops with the batch-aware cost model;
 * devices and channels are SHARED across requests with the exact same
   semantics as the single-query simulator: one op at a time per device
   (Eq. 6), serialized flows per directed channel (Eq. 8), zero-cost
@@ -65,13 +69,19 @@ def _task_table(
     placement: Mapping[int, int],
     cost: CostModel,
     aug: AugmentedDAG,
+    decode_batch: int = 1,
 ) -> Tuple[Dict[int, float], Dict[int, Tuple], Dict[int, List[int]], Dict[int, List[int]]]:
     """(dur, resource, deps, fanout) for every op and comm task.
 
     Shared by `simulate` and `simulate_pipeline` — the documented
     n_requests=1 equivalence depends on both using identical task semantics:
     op tasks run for p_ik on ("dev", k); comm tasks run for p_comm on
-    ("chan", src_dev, dst_dev), or for 0 on ("local",) when co-located."""
+    ("chan", src_dev, dst_dev), or for 0 on ("local",) when co-located.
+
+    ``decode_batch > 1`` charges each op its batch-aware amortized
+    per-request time (``CostModel.compute_time(batch=...)``): concurrent
+    serving slots decode as ONE batched kernel, so weight traffic is
+    streamed once per step, not once per request."""
     dur: Dict[int, float] = {}
     resource: Dict[int, Tuple] = {}
     deps: Dict[int, List[int]] = {}      # task -> prerequisite tasks
@@ -79,7 +89,7 @@ def _task_table(
 
     for nid, node in graph.nodes.items():
         k = placement[nid]
-        dur[nid] = cost.compute_time(node, k)
+        dur[nid] = cost.compute_time(node, k, batch=decode_batch)
         resource[nid] = ("dev", k)
         deps[nid] = []
         fanout.setdefault(nid, [])
@@ -384,6 +394,8 @@ def simulate_pipeline(
     arrival=None,
     *,
     max_in_flight: Optional[int] = None,
+    batching: str = "ragged",
+    decode_batch: int = 1,
     aug: Optional[AugmentedDAG] = None,
 ) -> PipelineResult:
     """Simulate ``n_requests`` copies of the placed graph sharing one cluster.
@@ -394,16 +406,39 @@ def simulate_pipeline(
 
     ``max_in_flight`` caps concurrency (serving slots): a request is admitted
     — its root tasks released — only once fewer than ``max_in_flight``
-    requests are unfinished, at ``max(arrival, slot-free time)``."""
+    requests are unfinished, at ``max(arrival, slot-free time)``.
+
+    ``batching`` selects the admission model, matching the two serving-engine
+    modes:
+
+    * ``"ragged"`` (default) — admit-on-retire: any freed slot is refilled
+      immediately (the engine's per-slot cache positions make this the real
+      runtime behavior);
+    * ``"lockstep"`` — cohort waves: up to ``max_in_flight`` requests are
+      admitted together, and the next wave opens only after EVERY request of
+      the current wave completes (the seed engine's shared-``cache_pos``
+      constraint with mixed-depth requests — the model planner objectives
+      scored before ragged batching landed).
+
+    ``decode_batch > 1`` applies the batch-aware cost model: each op is
+    charged its amortized per-request time at that decode batch size
+    (weight traffic streamed once per batched step), so ``slots > 1`` plans
+    are scored the way the batched engine actually runs them."""
     if n_requests < 1:
         raise ValueError("n_requests must be >= 1")
+    if batching not in ("ragged", "lockstep"):
+        raise ValueError(
+            f"batching must be 'ragged' or 'lockstep', got {batching!r}"
+        )
     aug = aug or augment(graph)
     arrivals = _resolve_arrivals(n_requests, arrival)
     if arrivals != sorted(arrivals):
         raise ValueError("arrival times must be non-decreasing")
 
     # per-task static data, identical for every request
-    dur, resource, deps, fanout = _task_table(graph, placement, cost, aug)
+    dur, resource, deps, fanout = _task_table(
+        graph, placement, cost, aug, decode_batch
+    )
     roots = [t for t, d in deps.items() if not d]
     tasks_per_request = len(dur)
 
@@ -464,9 +499,26 @@ def simulate_pipeline(
     slots = max_in_flight if max_in_flight is not None else n_requests
     if slots < 1:
         raise ValueError("max_in_flight must be >= 1")
-    next_admit = min(slots, n_requests)
-    for rid in range(next_admit):
-        push_event(arrivals[rid], ("admit", rid))
+    next_admit = 0
+    wave_open = 0            # unfinished requests of the current lockstep wave
+
+    def admit_wave(now: float) -> None:
+        """Release the next cohort of up to ``slots`` requests (lockstep):
+        each member enters at max(its arrival, the wave-open time), and the
+        NEXT wave opens only once every member of this one completes."""
+        nonlocal next_admit, wave_open
+        take = min(slots, n_requests - next_admit)
+        for rid in range(next_admit, next_admit + take):
+            push_event(max(now, arrivals[rid]), ("admit", rid))
+        next_admit += take
+        wave_open = take
+
+    if batching == "lockstep":
+        admit_wave(0.0)
+    else:
+        next_admit = min(slots, n_requests)
+        for rid in range(next_admit):
+            push_event(arrivals[rid], ("admit", rid))
 
     makespan = 0.0
     while events:
@@ -486,7 +538,12 @@ def simulate_pipeline(
         if remaining[rid] == 0:
             completions[rid] = t
             completed_requests += 1
-            if next_admit < n_requests:
+            if batching == "lockstep":
+                wave_open -= 1
+                if wave_open == 0 and next_admit < n_requests:
+                    admit_wave(t)
+            elif next_admit < n_requests:
+                # ragged admit-on-retire: the freed slot is refilled NOW
                 push_event(max(t, arrivals[next_admit]), ("admit", next_admit))
                 next_admit += 1
         for dep in fanout.get(task, []):
@@ -556,6 +613,7 @@ def bottleneck_time(
     placement: Mapping[int, int],
     cost: CostModel,
     *,
+    decode_batch: int = 1,
     aug: Optional[AugmentedDAG] = None,
 ) -> float:
     """Per-request busy time of the most loaded resource (device or channel).
@@ -563,13 +621,18 @@ def bottleneck_time(
     This is the steady-state completion interval of a saturated pipeline —
     requests/sec → 1 / bottleneck_time — and the objective minimized by
     ``plan(..., objective="throughput")``.  It deliberately ignores the
-    critical-path length (pipeline fill), which only affects latency."""
+    critical-path length (pipeline fill), which only affects latency.
+    ``decode_batch > 1`` charges ops their batch-aware amortized per-request
+    cost (one weight stream per batched decode step — see
+    ``CostModel.compute_time``)."""
     aug = aug or augment(graph)
     busy: Dict[Tuple, float] = {}
     for nid, node in graph.nodes.items():
         k = placement[nid]
         key = ("dev", k)
-        busy[key] = busy.get(key, 0.0) + cost.compute_time(node, k)
+        busy[key] = busy.get(key, 0.0) + cost.compute_time(
+            node, k, batch=decode_batch
+        )
     for q, c in aug.comm.items():
         ks, kd = placement[c.src], placement[c.dst]
         if ks != kd:

@@ -11,14 +11,17 @@ VMEM scratch across the KV sweep — the classic flash recurrence:
 Features: causal masking, sliding window (gemma2 local layers), score
 soft-capping, GQA handled by the ops.py wrapper (KV streamed per group,
 never repeated in memory).  Query/key positions are affine in the block
-indices (pos = block_idx·B + iota + offset), so masks are computed from
-``program_id`` — no position operands.  BQ=BK=128 blocks align with the
-128×128 MXU; ops.py pads head_dim to a lane multiple.
+indices (pos = block_idx·B + iota + offset); the offset is a **per-row
+scalar-prefetch operand** (``q_offsets[bh]``), so ragged decode batches —
+every serving slot at its own cache depth — run in one kernel launch with
+per-row causal masks.  BQ=BK=128 blocks align with the 128×128 MXU; ops.py
+pads head_dim to a lane multiple.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +34,8 @@ NEG_INF = -1e30
 
 
 def _flash_kernel(
+    offs_ref,   # scalar-prefetch [BH] — absolute position of query row 0,
+                # per batch·head row (ragged decode: one depth per slot)
     q_ref,      # [BQ, D]
     k_ref,      # [BK, D]
     v_ref,      # [BK, D]
@@ -43,14 +48,15 @@ def _flash_kernel(
     causal: bool,
     window: int,          # 0 = none
     softcap: float,       # 0 = none
-    q_offset: int,        # absolute position of query row 0
     k_len: int,           # valid key count (padding beyond is masked)
     n_kv_blocks: int,
     block_q: int,
     block_k: int,
 ):
+    bh = pl.program_id(0)
     qi = pl.program_id(1)
     kj = pl.program_id(2)
+    q_offset = offs_ref[bh]
 
     @pl.when(kj == 0)
     def _init():
@@ -110,6 +116,8 @@ def flash_attention_pallas(
     window: int = 0,
     softcap: float = 0.0,
     q_offset: int = 0,
+    q_offsets: Optional[jax.Array] = None,   # [BH] per-row query offsets
+                                             # (overrides scalar q_offset)
     k_len: int = 0,          # 0 → all keys valid
     block_q: int = DEFAULT_BQ,
     block_k: int = DEFAULT_BK,
@@ -120,6 +128,11 @@ def flash_attention_pallas(
     assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
     n_q = sq // block_q
     n_k = sk // block_k
+    if q_offsets is None:
+        q_offsets = jnp.full((bh,), int(q_offset), jnp.int32)
+    else:
+        assert q_offsets.shape == (bh,), (q_offsets.shape, bh)
+        q_offsets = q_offsets.astype(jnp.int32)
 
     kernel = functools.partial(
         _flash_kernel,
@@ -127,26 +140,31 @@ def flash_attention_pallas(
         causal=causal,
         window=int(window or 0),
         softcap=float(softcap or 0.0),
-        q_offset=int(q_offset),
         k_len=int(k_len) if k_len else sk,
         n_kv_blocks=n_k,
         block_q=block_q,
         block_k=block_k,
     )
-    return pl.pallas_call(
-        kernel,
+    # per-row offsets ride in as a scalar-prefetch operand (SMEM): available
+    # before the body runs, so masks stay affine in the block indices
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=(bh, n_q, n_k),
         in_specs=[
-            pl.BlockSpec((None, block_q, d), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((None, block_k, d), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((None, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((None, block_q, d), lambda b, i, j, *_: (b, i, 0)),
+            pl.BlockSpec((None, block_k, d), lambda b, i, j, *_: (b, j, 0)),
+            pl.BlockSpec((None, block_k, d), lambda b, i, j, *_: (b, j, 0)),
         ],
-        out_specs=pl.BlockSpec((None, block_q, d), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        out_specs=pl.BlockSpec((None, block_q, d), lambda b, i, j, *_: (b, i, 0)),
         scratch_shapes=[
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, d), jnp.float32),
         ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
         interpret=interpret,
-    )(q, k, v)
+    )(q_offsets, q, k, v)

@@ -5,6 +5,12 @@ the batch·kv_head axis — KV is streamed once per group, never repeated),
 head-dim padding to the 128-lane boundary, and sequence padding to block
 multiples.  On CPU the kernel runs in interpret mode (correctness path);
 on TPU it compiles to the real blockwise kernel.
+
+Ragged decode batches are supported through ``q_pos``: a per-row position
+operand ([B] or [B, Sq]) makes every batch row mask against its own cache
+depth (the per-slot ``cache_pos`` vector of the serving engine), streamed
+into the kernel as a scalar-prefetch operand.  A 1-D ``q_pos`` ([Sq]) or
+the static ``q_offset`` keep the classic shared-offset behavior.
 """
 
 from __future__ import annotations
@@ -32,6 +38,10 @@ def flash_attention(
     q: jax.Array,            # [B, Sq, H, D]
     k: jax.Array,            # [B, Sk, KV, D]
     v: jax.Array,            # [B, Sk, KV, D]
+    q_pos: Optional[jax.Array] = None,   # [Sq] or [B, Sq] query positions
+    k_pos: Optional[jax.Array] = None,   # [Sk] — must be arange(Sk) (affine);
+                                         # kept for signature parity with the
+                                         # naive/chunked impls
     *,
     scale: float,
     causal: bool = True,
@@ -42,9 +52,19 @@ def flash_attention(
 ) -> jax.Array:
     if interpret is None:
         interpret = _interpret_default()
+    del k_pos  # affine by construction (cache rows 0..Sk-1); masking uses q_pos
     b, sq, h, d = q.shape
     sk, kv = k.shape[1], k.shape[2]
     rep = h // kv
+
+    # resolve per-(batch·head) query offsets: position of query row 0 per row
+    if q_pos is None:
+        offs = jnp.full((b,), int(q_offset), jnp.int32)
+    elif q_pos.ndim == 2:                    # [B, Sq] — ragged rows
+        offs = q_pos[:, 0].astype(jnp.int32)
+    else:                                    # [Sq] shared across rows
+        offs = jnp.full((b,), q_pos[0].astype(jnp.int32))
+    offs_bh = jnp.repeat(offs, kv * rep)     # row-major (b, kv, rep) fold below
 
     # fold GQA groups into the kernel's batch axis: [B·KV·rep, S, D]
     qk = q.reshape(b, sq, kv, rep, d).transpose(0, 2, 3, 1, 4).reshape(b * kv * rep, sq, d)
@@ -77,7 +97,7 @@ def flash_attention(
         causal=causal,
         window=int(window or 0),
         softcap=float(softcap or 0.0),
-        q_offset=q_offset,
+        q_offsets=offs_bh,
         k_len=sk,
         block_q=bq,
         block_k=bk,

@@ -44,6 +44,16 @@ def main(argv=None):
         "--admission", choices=("queue", "reject"), default="queue",
         help="KV-aware admission: hold requests in queue or reject them",
     )
+    ap.add_argument(
+        "--batching", choices=("ragged", "lockstep"), default="ragged",
+        help="ragged = per-slot cache positions (continuous admission); "
+        "lockstep = seed-engine equal-depth cohorts (benchmark baseline)",
+    )
+    ap.add_argument(
+        "--derate-state", default=None, metavar="PATH",
+        help="persist the adaptive derate policy's state here; a restarted "
+        "engine resumes its learned derates instead of re-observing",
+    )
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -66,8 +76,10 @@ def main(argv=None):
             min_samples=(
                 min(4, args.adapt_every) if args.adapt_every > 0 else 4
             ),
+            state_path=args.derate_state,
         ),
         admission=args.admission,
+        batching=args.batching,
     )
     print(
         f"[serve] {args.arch}: placement={engine.placement_result.method} "

@@ -144,7 +144,11 @@ def decode_stack(params, tokens, cfg, memory=None, cross_cache=None,
     b, s = tokens.shape
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
     if cache_pos is not None:
-        positions = positions + cache_pos
+        # scalar: one depth for every row; [B] vector: ragged batch — each
+        # row offsets (and masks, and writes KV) at its own fill level
+        cp = jnp.asarray(cache_pos, jnp.int32)
+        positions = positions + (cp if cp.ndim == 0 else cp[:, None])
+        cache_pos = cp
 
     if cfg.scan_layers:
         def body(x, xs):
@@ -229,6 +233,8 @@ def prefill(params, batch, cfg: ModelConfig, max_len: Optional[int] = None):
 
 
 def decode_step(params, token_batch, caches, cache_pos, cfg: ModelConfig):
+    """One-token decoder step; ``cache_pos`` is a scalar or a ``(B,)`` int32
+    vector (ragged batch — per-row self-attention cache depth)."""
     logits, new_self = decode_stack(
         params, token_batch["tokens"], cfg,
         cross_cache=caches["cross"], self_cache=caches["self"],

@@ -9,6 +9,10 @@ M-RoPE (qwen2-vl), and three implementations:
 * ``chunked`` — lax.scan over KV blocks with online softmax (flash-attention
   algorithm in pure jnp; memory-safe at 32k+ and what the dry-run lowers),
 * ``pallas``  — the TPU kernel in repro.kernels (validated in interpret mode).
+
+All three accept **ragged decode batches**: a ``(B,)`` ``cache_pos`` vector
+gives every batch row its own KV write index and causal mask over its own
+valid length, so serving slots at different depths decode in one batch.
 """
 
 from __future__ import annotations
@@ -138,18 +142,28 @@ def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
 
 
 def _attn_mask(
-    q_pos: jax.Array,          # [Sq] absolute positions of queries
+    q_pos: jax.Array,          # [Sq] or [B, Sq] absolute positions of queries
     k_pos: jax.Array,          # [Sk]
     causal: bool,
     window: Optional[int],
 ) -> jax.Array:
-    """True where attention is allowed."""
-    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    """True where attention is allowed: [Sq, Sk], or [B, Sq, Sk] when
+    ``q_pos`` carries per-row positions (ragged batches — each serving slot
+    sits at its own decode depth)."""
+    qp = q_pos[..., :, None]
+    m = jnp.ones(qp.shape[:-1] + (k_pos.shape[0],), dtype=bool)
     if causal:
-        m &= k_pos[None, :] <= q_pos[:, None]
+        m &= k_pos <= qp
     if window is not None:
-        m &= k_pos[None, :] > (q_pos[:, None] - window)
+        m &= k_pos > (qp - window)
     return m
+
+
+def _bcast_mask(mask: jax.Array) -> jax.Array:
+    """[Sq,Sk] or [B,Sq,Sk] mask → broadcastable over [B,G,R,Sq,Sk] scores."""
+    if mask.ndim == 2:
+        return mask[None, None, None]
+    return mask[:, None, None]
 
 
 def _naive_attention(q, k, v, q_pos, k_pos, *, causal, window, cap, scale):
@@ -160,7 +174,7 @@ def _naive_attention(q, k, v, q_pos, k_pos, *, causal, window, cap, scale):
     ) * scale
     scores = softcap(scores, cap)
     mask = _attn_mask(q_pos, k_pos, causal, window)
-    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    scores = jnp.where(_bcast_mask(mask), scores, -1e30)
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bgrqk,bkgd->bqgrd", w.astype(v.dtype), v)
     return out
@@ -190,7 +204,7 @@ def _chunked_attention(q, k, v, q_pos, k_pos, *, causal, window, cap, scale, chu
         s = jnp.einsum("bqgrd,bkgd->bgrqk", qf, kb.astype(jnp.float32)) * scale
         s = softcap(s, cap)
         mask = _attn_mask(q_pos, pb, causal, window)
-        s = jnp.where(mask[None, None, None], s, -1e30)
+        s = jnp.where(_bcast_mask(mask), s, -1e30)
         m_new = jnp.maximum(m_prev, s.max(axis=-1))
         alpha = jnp.exp(m_prev - m_new)
         pexp = jnp.exp(s - m_new[..., None])
@@ -216,13 +230,17 @@ def multihead_attention(
     *,
     positions: jax.Array,             # [B, Sq] (or [3, B, Sq] for M-RoPE)
     kv_cache: Optional[Dict[str, jax.Array]] = None,   # {"k","v": [B,Smax,KV,hd]}
-    cache_pos: Optional[jax.Array] = None,             # scalar: #valid cache entries
+    cache_pos: Optional[jax.Array] = None,             # scalar, or [B] per-row
+                                                       # (#valid cache entries)
     layer_window: Optional[int] = None,
     cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,  # enc-dec cross attn
     causal: Optional[bool] = None,    # None → causal for self, full for cross
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     hd = cfg.resolved_head_dim
     b, sq, _ = x.shape
+    # ragged decode: a [B] cache_pos vector means every batch row sits at its
+    # own depth — per-row KV write index and per-row causal mask below
+    ragged = cache_pos is not None and jnp.ndim(cache_pos) > 0
     q = (x @ p["wq"]).reshape(b, sq, cfg.n_heads, hd)
 
     if cross_kv is None:
@@ -237,17 +255,19 @@ def multihead_attention(
             k = rmsnorm(k, p["k_norm"])
 
     # RoPE (self-attention only; seamless cross-attn has no rope on kv)
+    # q_pos: [Sq] shared across rows, or [B, Sq] per-row (ragged decode —
+    # positions already carry the per-row cache_pos offset)
     if cross_kv is None:
         if cfg.mrope_sections is not None:
             q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
             k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
-            q_pos1d = positions[0][0]        # [Sq] — temporal stream for masking
+            q_pos = positions[0] if ragged else positions[0][0]  # temporal stream
         else:
             q = apply_rope(q, positions, cfg.rope_theta)
             k = apply_rope(k, positions, cfg.rope_theta)
-            q_pos1d = positions[0]
+            q_pos = positions if ragged else positions[0]
     else:
-        q_pos1d = positions[0] if positions.ndim == 2 else positions[0][0]
+        q_pos = positions[0] if positions.ndim == 2 else positions[0][0]
 
     q = shard_hint(q, "batch", None, "heads", None)
 
@@ -255,15 +275,28 @@ def multihead_attention(
     if kv_cache is not None and cross_kv is None:
         # decode / incremental prefill: write new kv at cache_pos
         kcache, vcache = kv_cache["k"], kv_cache["v"]
-        kcache = jax.lax.dynamic_update_slice_in_dim(kcache, k.astype(kcache.dtype), cache_pos, axis=1)
-        vcache = jax.lax.dynamic_update_slice_in_dim(vcache, v.astype(vcache.dtype), cache_pos, axis=1)
+        if ragged:
+            # each row writes at its own depth (per-slot KV write index)
+            upd = lambda c, new, pos: jax.lax.dynamic_update_slice_in_dim(
+                c, new, pos, axis=0
+            )
+            kcache = jax.vmap(upd)(kcache, k.astype(kcache.dtype), cache_pos)
+            vcache = jax.vmap(upd)(vcache, v.astype(vcache.dtype), cache_pos)
+        else:
+            kcache = jax.lax.dynamic_update_slice_in_dim(kcache, k.astype(kcache.dtype), cache_pos, axis=1)
+            vcache = jax.lax.dynamic_update_slice_in_dim(vcache, v.astype(vcache.dtype), cache_pos, axis=1)
         new_cache = {"k": kcache, "v": vcache}
         k, v = kcache, vcache
         k_pos1d = jnp.arange(k.shape[1])
         # the causal test against q_pos also masks unwritten cache slots
+        # (per ROW in the ragged case: row b sees only its own ≤ cache_pos[b])
         causal = True
     else:
-        k_pos1d = q_pos1d if cross_kv is None else jnp.arange(k.shape[1])
+        k_pos1d = (
+            q_pos
+            if cross_kv is None and q_pos.ndim == 1
+            else jnp.arange(k.shape[1])
+        )
         if causal is None:
             causal = cross_kv is None
 
@@ -275,21 +308,34 @@ def multihead_attention(
     window = layer_window
     impl = cfg.attention_impl
     if impl == "pallas":
+        # the kernel specializes on the window at trace time; a traced
+        # per-layer window (layer-scan xs) cannot be static — fall back to
+        # the pure-jnp path for that call
+        try:
+            static_window = None if window is None else int(window)
+        except (TypeError, jax.errors.TracerArrayConversionError,
+                jax.errors.ConcretizationTypeError):
+            static_window = None
+            impl = "chunked"
+        else:
+            if static_window is not None and static_window <= 0:
+                static_window = None
+    if impl == "pallas":
         from repro.kernels.flash_attention import ops as fa_ops
 
         out = fa_ops.flash_attention(
-            q, k, v, q_pos1d, k_pos1d, causal=causal, window=window,
+            q, k, v, q_pos, k_pos1d, causal=causal, window=static_window,
             softcap=cfg.attn_softcap, scale=scale,
         )
     elif impl == "chunked" and k.shape[1] > cfg.attn_chunk and sq > 1:
         out = _chunked_attention(
-            qg, k, v, q_pos1d, k_pos1d,
+            qg, k, v, q_pos, k_pos1d,
             causal=causal, window=window, cap=cfg.attn_softcap, scale=scale,
             chunk=cfg.attn_chunk,
         ).reshape(b, sq, cfg.n_heads, hd)
     else:
         out = _naive_attention(
-            qg, k, v, q_pos1d, k_pos1d,
+            qg, k, v, q_pos, k_pos1d,
             causal=causal, window=window, cap=cfg.attn_softcap, scale=scale,
         ).astype(x.dtype).reshape(b, sq, cfg.n_heads, hd)
 

@@ -402,11 +402,18 @@ def forward(
     """Returns (logits [B,S,V], new_caches, aux_loss)."""
     x, positions = _embed_in(params, batch, cfg)
     if cache_pos is not None:
-        # decode: absolute positions offset by the cache fill level
-        if cfg.mrope_sections is not None:
-            positions = positions + cache_pos
-        else:
-            positions = positions + cache_pos
+        # decode: absolute positions offset by the cache fill level.  A [B]
+        # cache_pos vector carries one depth per row (ragged batches): each
+        # row's positions — and its causal mask / KV write index downstream —
+        # follow its own fill level.
+        cp = jnp.asarray(cache_pos, jnp.int32)
+        if cp.ndim == 0:
+            positions = positions + cp
+        elif cfg.mrope_sections is not None:   # positions: [3, B, S]
+            positions = positions + cp[None, :, None]
+        else:                                  # positions: [B, S]
+            positions = positions + cp[:, None]
+        cache_pos = cp
     aux = jnp.zeros((), jnp.float32)
     if cfg.family == "ssm":
         if caches is None:
@@ -451,7 +458,9 @@ def prefill(params, batch, cfg: ModelConfig, max_len: Optional[int] = None):
 
 
 def decode_step(params, token_batch, caches, cache_pos, cfg: ModelConfig):
-    """One-token step: token [B,1] (or embeds [B,1,D]), cache_pos scalar."""
+    """One-token step: token [B,1] (or embeds [B,1,D]); ``cache_pos`` is a
+    scalar (all rows at one depth) or a ``(B,)`` int32 vector (ragged batch —
+    per-row KV write index and causal mask over each row's valid length)."""
     logits, new_caches, _ = forward(
         params, token_batch, cfg, caches=caches, cache_pos=cache_pos
     )

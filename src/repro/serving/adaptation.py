@@ -42,7 +42,10 @@ raised (capped at 1.0), un-derating it.
 
 from __future__ import annotations
 
+import json
 import math
+import os
+import tempfile
 from dataclasses import dataclass, field
 from typing import Dict, List, Mapping, Optional
 
@@ -88,6 +91,14 @@ class AdaptationConfig:
     min_samples:
         Minimum observed stage samples inside a window for that stage to
         contribute evidence.
+    state_path:
+        Optional filesystem path for **derate-state persistence**: when set,
+        the serving engine loads the policy's state (factors, EMAs, streaks,
+        window counter) from this file at startup — so a restarted engine
+        plans on the derated cluster it had already learned instead of
+        rediscovering the drift from scratch — and rewrites the file after
+        every observation window.  ``None`` (default) keeps state in-memory
+        only.
     """
 
     window_steps: int = 0
@@ -99,6 +110,7 @@ class AdaptationConfig:
     smoothing: float = 0.7
     min_derate: float = 0.05
     min_samples: int = 4
+    state_path: Optional[str] = None
 
     def __post_init__(self):
         if self.trigger_ratio <= 1.0:
@@ -195,6 +207,70 @@ class DeratePolicy:
         self._ema.pop(device, None)
         self._hi.pop(device, None)
         self._lo.pop(device, None)
+
+    # ------------------------------------------------- persistence
+    def to_json(self) -> str:
+        """Serialize the policy's RESUMABLE state — factors, log-space EMAs,
+        confirmation streaks, and the window counter — as a JSON string.
+
+        The decision log (:attr:`events`) is deliberately excluded: it is
+        observability, not control state, and can grow to thousands of
+        entries.  Round trip with :meth:`from_json`."""
+        return json.dumps({
+            "version": 1,
+            "windows": self.windows,
+            "factors": {str(d): f for d, f in self.factors.items()},
+            "ema": {str(d): e for d, e in self._ema.items()},
+            "hi": {str(d): n for d, n in self._hi.items()},
+            "lo": {str(d): n for d, n in self._lo.items()},
+        })
+
+    @classmethod
+    def from_json(
+        cls, payload: str, config: Optional[AdaptationConfig] = None
+    ) -> "DeratePolicy":
+        """Rebuild a policy from :meth:`to_json` output.
+
+        ``config`` supplies the (non-serialized) knobs — the persisted state
+        is control state only, so a restarted engine may resume the learned
+        derates under different thresholds.  Raises ``ValueError`` on a
+        payload this version cannot read."""
+        data = json.loads(payload)
+        if not isinstance(data, dict) or data.get("version") != 1:
+            raise ValueError(
+                f"unsupported DeratePolicy state payload: {payload[:80]!r}"
+            )
+        pol = cls(config)
+        pol.windows = int(data.get("windows", 0))
+        pol.factors = {int(d): float(f) for d, f in data.get("factors", {}).items()}
+        pol._ema = {int(d): float(e) for d, e in data.get("ema", {}).items()}
+        pol._hi = {int(d): int(n) for d, n in data.get("hi", {}).items()}
+        pol._lo = {int(d): int(n) for d, n in data.get("lo", {}).items()}
+        return pol
+
+    def save(self, path: str) -> None:
+        """Atomically write :meth:`to_json` to ``path`` (tmp file + rename,
+        so a crash mid-write can never leave a truncated state file)."""
+        d = os.path.dirname(os.path.abspath(path))
+        fd, tmp = tempfile.mkstemp(dir=d, prefix=".derate-state-")
+        try:
+            with os.fdopen(fd, "w") as f:
+                f.write(self.to_json())
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    @classmethod
+    def load(
+        cls, path: str, config: Optional[AdaptationConfig] = None
+    ) -> "DeratePolicy":
+        """Read a policy back from :meth:`save` output."""
+        with open(path) as f:
+            return cls.from_json(f.read(), config)
 
     # ------------------------------------------------------------------
     def observe(self, ratios: Mapping[int, float]) -> Optional[Dict[int, float]]:

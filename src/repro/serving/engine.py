@@ -1,7 +1,17 @@
-"""Serving engine: continuous batching over the Moirai stage executor.
+"""Serving engine: ragged continuous batching over the Moirai stage executor.
 
 * fixed decode slots (classic continuous batching: a finished sequence frees
   its slot for the next queued request; prefill happens into the slot),
+* **ragged batches** (default): every slot carries its own cache position —
+  the decode batch hands the executor a ``(slots,)`` ``cache_pos`` vector, so
+  each row writes KV at its own depth and masks over its own valid length.
+  Admission is therefore *continuous*: any free slot is filled immediately,
+  regardless of the other slots' depths (mixed prompt lengths, hot-swap
+  re-queues mid-generation — no cohort waves).  ``batching="lockstep"``
+  keeps the seed engine's shared-``cache_pos`` behavior, where admission
+  must hold a request until every active slot sits at exactly its resume
+  depth — retained as the benchmark baseline
+  (``benchmarks/ragged_batching.py``),
 * Moirai placement computed once at startup from the layer-level OpGraph and
   the cluster spec (and re-computed by ``on_device_failure`` — elastic).
   With more than one decode slot the engine serves a *pipeline* of requests,
@@ -37,6 +47,7 @@
 from __future__ import annotations
 
 import dataclasses
+import os
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Deque, Dict, List, Optional
@@ -99,6 +110,11 @@ class ServingEngine:
         admission: ``"queue"`` (default) holds requests in the queue while
             their KV residency would overflow a planned device;
             ``"reject"`` retires them immediately with ``rejected=True``.
+        batching: ``"ragged"`` (default) decodes every slot at its own cache
+            position (continuous admission into any free slot);
+            ``"lockstep"`` shares one position across the batch and admits
+            only equal-depth cohorts (the seed-engine behavior, kept as the
+            benchmark baseline).
     """
 
     def __init__(
@@ -115,6 +131,7 @@ class ServingEngine:
         straggler_factor: float = 4.0,
         adapt: Optional[AdaptationConfig] = None,
         admission: str = "queue",
+        batching: str = "ragged",
     ):
         self.cfg = cfg
         self.params = params
@@ -127,6 +144,11 @@ class ServingEngine:
         if admission not in ("queue", "reject"):
             raise ValueError(f"admission must be 'queue' or 'reject', got {admission!r}")
         self.admission = admission
+        if batching not in ("ragged", "lockstep"):
+            raise ValueError(
+                f"batching must be 'ragged' or 'lockstep', got {batching!r}"
+            )
+        self.batching = batching
         # serving >1 slot is a pipelined workload: optimize steady-state
         # throughput (bottleneck-stage time), not single-query makespan, and
         # charge Eq. 5 one resident KV-cache copy per slot so the planner
@@ -147,16 +169,29 @@ class ServingEngine:
         self.plan_cfg = plan_cfg
 
         # adaptation loop state: the policy owns streaks/hysteresis, the
-        # engine owns the applied derate map and the (derated) cost model
+        # engine owns the applied derate map and the (derated) cost model.
+        # With AdaptationConfig.state_path set, a previously persisted
+        # policy state is resumed: the engine plans on the derated cluster
+        # it had already learned instead of rediscovering the drift.
         self.policy = DeratePolicy(adapt)
-        self.derate: Dict[int, float] = {}
-        self.cluster_effective: ClusterSpec = cluster
+        state_path = self.policy.config.state_path
+        if state_path and os.path.exists(state_path):
+            self.policy = DeratePolicy.load(state_path, self.policy.config)
+        self.derate: Dict[int, float] = self.policy.derate_map()
+        self.cluster_effective: ClusterSpec = (
+            cluster.with_derate(self.derate) if self.derate else cluster
+        )
         self.replan_history: List[Dict[str, Any]] = []
         self._steps_since_window = 0
 
         self.graph = transformer_graph(cfg, seq_len=max_len, granularity="block")
-        self._cost = CostModel(cluster)
-        self.placement_result = plan(self.graph, cluster, self.plan_cfg)
+        self._cost = CostModel(self.cluster_effective)
+        if self.derate:
+            self.placement_result = replan(
+                self.graph, cluster, (), self.plan_cfg, derate=self.derate
+            )
+        else:
+            self.placement_result = plan(self.graph, cluster, self.plan_cfg)
         self._build_executor(self.placement_result.placement)
 
         self.queue: List[Request] = []
@@ -169,6 +204,14 @@ class ServingEngine:
         self.caches = None
         self.failed_devices: List[int] = []
         self._devices_all: Optional[List[Any]] = None  # pre-failure jax devices
+
+    # ------------------------------------------------------------------
+    def _persist_policy(self):
+        """Write the policy's control state to ``state_path`` (when set) so
+        an engine restart resumes the learned derates."""
+        path = self.policy.config.state_path
+        if path:
+            self.policy.save(path)
 
     # ------------------------------------------------------------------
     @property
@@ -229,21 +272,25 @@ class ServingEngine:
         for slot in range(self.slots):
             if self.active[slot] is None and self.queue:
                 n_active = sum(r is not None for r in self.active)
-                # lockstep cohort check: batched decode shares one cache
-                # position across slots, so a request may only join a batch
-                # whose active slots sit at EXACTLY its resume depth
-                # (prompt + generated).  Unequal-depth requests — mixed
-                # prompt lengths, or hot-swap re-queues of sequences that
-                # were at different depths — wait for the wave to drain
-                # instead of silently corrupting the laggard's KV rows.
-                pos_set = {
-                    int(self.slot_pos[i])
-                    for i, r in enumerate(self.active)
-                    if r is not None
-                }
-                depth = len(self.queue[0].prompt) + len(self.queue[0].out_tokens)
-                if pos_set and pos_set != {depth}:
-                    break
+                if self.batching == "lockstep":
+                    # lockstep cohort check (legacy baseline): batched decode
+                    # shares one cache position across slots, so a request
+                    # may only join a batch whose active slots sit at
+                    # EXACTLY its resume depth (prompt + generated).
+                    # Unequal-depth requests — mixed prompt lengths, or
+                    # hot-swap re-queues of sequences that were at different
+                    # depths — wait for the wave to drain instead of
+                    # silently corrupting the laggard's KV rows.  Ragged
+                    # batching (the default) has no such constraint: every
+                    # slot carries its own cache position.
+                    pos_set = {
+                        int(self.slot_pos[i])
+                        for i, r in enumerate(self.active)
+                        if r is not None
+                    }
+                    depth = len(self.queue[0].prompt) + len(self.queue[0].out_tokens)
+                    if pos_set and pos_set != {depth}:
+                        break
                 if n_active > 0 and not self._admission_ok(n_active + 1):
                     # one more resident KV copy would overflow a planned
                     # device. (With zero active requests we admit regardless:
@@ -313,6 +360,10 @@ class ServingEngine:
         ):
             req.done = True
             self.active[slot] = None
+            # park the freed slot at depth 0: an inactive row's garbage
+            # decode then writes (and attends) at its row's position 0,
+            # which the next admission's full-row prefill overwrites anyway
+            self.slot_pos[slot] = 0
             self._record_finished(req)
             return True
         return False
@@ -322,12 +373,13 @@ class ServingEngine:
         (possibly) close an observation window.  Returns the number of
         active sequences decoded this step.
 
-        Batched decode shares one ``cache_pos`` across slots (seed-engine
-        design), so admission enforces lockstep cohorts: a request joins a
-        non-empty batch only at exactly the batch's current position (see
-        ``_admit``), and unequal-depth requests serialize into waves.
-        Per-slot cache positions (ragged batches, full cross-depth
-        batching) are a ROADMAP follow-on."""
+        Ragged batching (default): the decode batch carries a ``(slots,)``
+        ``cache_pos`` vector — every slot writes KV at its own depth and
+        masks over its own valid length, so any mix of depths decodes
+        together and admission is continuous (``_admit`` fills any free
+        slot immediately).  ``batching="lockstep"`` shares one position
+        (the max over active slots) and relies on ``_admit``'s equal-depth
+        cohort check — the seed-engine behavior kept as a baseline."""
         self._admit()
         idx = [i for i, r in enumerate(self.active) if r is not None]
         if not idx:
@@ -339,7 +391,10 @@ class ServingEngine:
             for i in range(self.slots)
         ]
         toks = jnp.asarray(last, jnp.int32)[:, None]
-        pos = int(max(self.slot_pos[i] for i in idx))
+        if self.batching == "lockstep":
+            pos = int(max(self.slot_pos[i] for i in idx))
+        else:
+            pos = np.asarray(self.slot_pos, np.int32)   # one depth per slot
         logits, self.caches = self.executor.forward(toks, self.caches, cache_pos=pos)
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
         for i in idx:
@@ -437,6 +492,7 @@ class ServingEngine:
         # resurrect the dead device's derate into engine state
         self.derate.pop(device_idx, None)
         self.policy.forget(device_idx)
+        self._persist_policy()
         self._replan_and_rebuild(reason=f"device {device_idx} failed")
 
     # ------------------------------------------------------------------
@@ -533,6 +589,10 @@ class ServingEngine:
             cal.add_stage_sample(devs[i], r / baseline, self._stage_classes[i])
         ratios = cal.device_ratios()
         new_map = self.policy.observe(ratios)
+        # every window mutates control state (streaks, EMAs, window count) —
+        # persist now so a restart resumes mid-confirmation, not just after
+        # a committed derate
+        self._persist_policy()
         replanned = False
         if new_map is not None and new_map != self.derate:
             self.derate = new_map

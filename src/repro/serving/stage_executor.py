@@ -9,7 +9,9 @@ Moirai device maps to one jax.Device.
 
 Supports dense/MoE decoder-only models at ``scan_layers=False`` (per-layer
 param lists — the serving configuration).  Prefill and decode keep each
-stage's KV cache resident on that stage's device.
+stage's KV cache resident on that stage's device.  Decode accepts a
+``(B,)`` ``cache_pos`` vector — ragged batches where every slot row sits at
+its own depth — carried across stage boundaries unchanged.
 
 ``replace_device`` + ``from_replan`` give elastic recovery: on device
 failure the engine re-plans with core.placement.replan and rebuilds stages —
@@ -116,7 +118,7 @@ class StageExecutor:
             self.stage_params.append(sp)
 
     # ------------------------------------------------------------------
-    def _stage_fn(self, si: int, decode: bool):
+    def _stage_fn(self, si: int):
         cfg = self.cfg
         st = self.stages[si]
         windows = [int(self._windows[i]) for i in st.layer_ids]
@@ -172,20 +174,25 @@ class StageExecutor:
         self,
         tokens: jax.Array,            # [B, S] (prefill) or [B, 1] (decode)
         caches=None,
-        cache_pos: Optional[int] = None,
+        cache_pos=None,               # int scalar, or (B,) int vector (ragged
+                                      # decode: one cache depth per slot row)
     ):
         b, s = tokens.shape
-        pos0 = 0 if cache_pos is None else int(cache_pos)
-        positions = jnp.broadcast_to(
-            jnp.arange(pos0, pos0 + s, dtype=jnp.int32)[None], (b, s)
+        cp = jnp.asarray(0 if cache_pos is None else cache_pos, jnp.int32)
+        # per-row positions: row b decodes at depth cp[b] (scalar cp → all
+        # rows share one depth, the classic lockstep batch)
+        positions = jnp.arange(s, dtype=jnp.int32)[None] + (
+            cp[:, None] if cp.ndim else cp
         )
-        cp = jnp.asarray(pos0, jnp.int32)
+        positions = jnp.broadcast_to(positions, (b, s))
         x = tokens
         new_caches = []
         for si, st in enumerate(self.stages):
             t0 = time.perf_counter()
             x = jax.device_put(x, st.device)          # inter-stage data flow
-            fn = self._fns.setdefault(si, self._stage_fn(si, s == 1))
+            fn = self._fns.get(si)
+            if fn is None:
+                fn = self._fns[si] = self._stage_fn(si)
             st_caches = caches[si] if caches is not None else None
             x, nc = fn(self.stage_params[si], x, positions, st_caches, cp)
             x.block_until_ready()

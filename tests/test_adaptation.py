@@ -448,15 +448,20 @@ def test_engine_hot_swap_resumes_in_flight_requests(small_model):
     assert req2.out_tokens == ref.out_tokens
 
 
-def test_engine_mixed_depth_requests_serialize_into_waves(small_model):
-    """Batched decode shares one cache position, so a request whose depth
-    differs from the active batch must WAIT (not corrupt the laggard's KV):
-    outputs must match each request served alone."""
+def test_engine_mixed_depth_lockstep_waits_ragged_admits(small_model):
+    """Mixed-depth admission across batching modes.
+
+    ``batching="lockstep"`` (seed behavior, kept as baseline): batched
+    decode shares one cache position, so a request whose depth differs from
+    the active batch must WAIT — serialized into waves, never corrupting
+    the laggard's KV.  ``batching="ragged"`` (default): every slot carries
+    its own cache position, so the same request is admitted IMMEDIATELY
+    mid-flight.  Both must match each request served alone."""
     cfg, model, params = small_model
     cluster = tpu_slice_cluster(n_slices=1)
-    mk = lambda slots: ServingEngine(
+    mk = lambda slots, **kw: ServingEngine(
         cfg, params, cluster, slots=slots, max_len=64,
-        plan_cfg=PlanConfig(method="etf"), eos_id=-1)
+        plan_cfg=PlanConfig(method="etf"), eos_id=-1, **kw)
     solo = {}
     for rid, prompt in ((0, [1, 2, 3]), (1, [7, 8])):
         e = mk(1)
@@ -464,7 +469,9 @@ def test_engine_mixed_depth_requests_serialize_into_waves(small_model):
         e.submit(r)
         e.run_until_drained()
         solo[rid] = r.out_tokens
-    eng = mk(2)
+
+    # --- lockstep baseline: the mixed-depth request waits for the wave ---
+    eng = mk(2, batching="lockstep")
     r0 = Request(rid=0, prompt=[1, 2, 3], max_new_tokens=5)
     r1 = Request(rid=1, prompt=[7, 8], max_new_tokens=5)
     eng.submit(r0)
@@ -475,8 +482,21 @@ def test_engine_mixed_depth_requests_serialize_into_waves(small_model):
     assert r0.out_tokens == solo[0]
     assert r1.out_tokens == solo[1]
 
-    # equal-depth requests still batch together (cohort fills both slots)
-    eng2 = mk(2)
+    # --- ragged (default): the mixed-depth request joins mid-flight ------
+    eng3 = mk(2)
+    assert eng3.batching == "ragged"
+    r0 = Request(rid=0, prompt=[1, 2, 3], max_new_tokens=5)
+    r1 = Request(rid=1, prompt=[7, 8], max_new_tokens=5)
+    eng3.submit(r0)
+    eng3.step()                     # r0 admitted and decoding
+    eng3.submit(r1)                 # different depth — admitted anyway
+    assert eng3.step() == 2 and eng3.active.count(None) == 0
+    eng3.run_until_drained()
+    assert r0.out_tokens == solo[0]
+    assert r1.out_tokens == solo[1]
+
+    # equal-depth requests still batch together in lockstep mode
+    eng2 = mk(2, batching="lockstep")
     a = Request(rid=0, prompt=[1, 2, 3], max_new_tokens=5)
     b = Request(rid=1, prompt=[4, 5, 6], max_new_tokens=5)
     eng2.submit(a)
