@@ -33,8 +33,38 @@ SCENARIOS: Dict[str, Callable[[], ClusterSpec]] = {
 }
 
 
-def write_bench_json(name: str, metrics: Mapping[str, Any]) -> str:
+def validate_bench_payload(payload: Mapping[str, Any]) -> None:
+    """Schema check for ``BENCH_*.json`` payloads.
+
+    Every payload must carry ``name`` (which benchmark), ``bar`` (the
+    acceptance threshold it is held to) and ``measured`` (the headline
+    number, finite, comparable against ``bar`` across nightly runs) — the
+    trajectory tooling ingests these fields blindly, so a malformed entry
+    must fail at WRITE time, not at analysis time."""
+    for key in ("name", "bar", "measured"):
+        if key not in payload:
+            raise ValueError(f"bench payload missing required key {key!r}: "
+                             f"{sorted(payload)}")
+    if not isinstance(payload["name"], str) or not payload["name"]:
+        raise ValueError(f"bench payload 'name' must be a non-empty string, "
+                         f"got {payload['name']!r}")
+    for key in ("bar", "measured"):
+        v = payload[key]
+        if isinstance(v, bool) or not isinstance(v, (int, float)):
+            raise ValueError(f"bench payload {key!r} must be a number, got {v!r}")
+        if v != v or v in (float("inf"), float("-inf")):
+            raise ValueError(f"bench payload {key!r} must be finite, got {v!r}")
+
+
+def write_bench_json(
+    name: str, metrics: Mapping[str, Any], *, bar: float, measured: float
+) -> str:
     """Write one benchmark's metrics to ``BENCH_<name>.json``.
+
+    ``bar`` is the acceptance threshold the benchmark is held to and
+    ``measured`` the headline number against it (e.g. a speedup) — both
+    are REQUIRED and schema-checked (:func:`validate_bench_payload`) so the
+    nightly perf-trajectory tooling never ingests a malformed entry.
 
     The file lands in ``$BENCH_JSON_DIR`` (default: current directory) and
     is what the nightly CI job uploads as a workflow artifact — keep the
@@ -45,9 +75,13 @@ def write_bench_json(name: str, metrics: Mapping[str, Any]) -> str:
     path = os.path.join(out_dir, f"BENCH_{name}.json")
     payload = {
         "bench": name,
+        "name": name,
+        "bar": float(bar),
+        "measured": float(measured),
         "generated_unix": time.time(),
         "metrics": dict(metrics),
     }
+    validate_bench_payload(payload)
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
         f.write("\n")

@@ -173,7 +173,7 @@ def run(arch: str = "llama3.2-1b") -> Dict[str, float]:
 
 def main() -> None:
     m = run()
-    write_bench_json("ragged_batching", m)
+    write_bench_json("ragged_batching", m, bar=1.5, measured=m["speedup"])
     assert m["token_identical"] == 1.0, (
         "ragged greedy decode must be token-for-token identical to the "
         "sequential reference"

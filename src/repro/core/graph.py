@@ -62,6 +62,11 @@ class OpGraph:
         self.name = name
         self.nodes: Dict[int, OpNode] = {}
         self._next_id = 0
+        # sequence length the node costs were counted at (set by the model
+        # graph builders); prefill-aware scoring rescales per-chunk work
+        # relative to this — None for graphs with no token axis (paper CV
+        # models, synthetic DAGs)
+        self.seq_len: Optional[int] = None
         for n in nodes or ():
             self.add_existing(n)
 
@@ -176,6 +181,7 @@ class OpGraph:
 
     def copy(self) -> "OpGraph":
         g = OpGraph(name=self.name)
+        g.seq_len = self.seq_len
         for n in self.nodes.values():
             g.add_existing(n.copy())
         g._next_id = self._next_id

@@ -122,6 +122,9 @@ def solve_placement(
     congestion_min_frac: float = 0.005,
     objective: str = "latency",
     serving_slots: int = 1,
+    prompt_len: float = 0.0,
+    prefill_chunk: Optional[int] = None,
+    graph_seq_len: Optional[int] = None,
     horizon: Optional[float] = None,
     tighten_horizon: bool = True,
     verbose: bool = False,
@@ -134,6 +137,16 @@ def solve_placement(
 
     ``serving_slots``: Eq. 5 charges each op ``param_bytes + serving_slots ×
     kv_bytes`` resident memory (one KV-cache copy per concurrent request).
+
+    ``prompt_len > 0`` (throughput mode): each request's chunked-prefill
+    work — ceil(prompt_len / prefill_chunk) passes of every op at its
+    chunk's token count (relative to ``graph_seq_len``, default
+    ``graph.seq_len``) — is added to the per-device and per-channel
+    busy-time accumulators, so the solver balances the work the serving
+    engine actually runs (prefill + decode), not decode alone.  The Eq.
+    4/6/7/8 feasibility families stay on the single decode pass (prefill
+    passes reuse the same placement; they add busy time, not new
+    scheduling variables).
 
     ``upper_bound`` (seconds): a known-feasible value of the *configured
     objective* (e.g. from a heuristic schedule, which satisfies every MILP
@@ -174,6 +187,36 @@ def solve_placement(
     # ---------------------------------------------------------------- costs
     p = {o: np.array([cost.compute_time(graph.nodes[o], k) for k in range(K)]) for o in ops}
     pcomm = {q: cost.comm_matrix(aug.comm[q].bytes) for q in comms}
+
+    # per-request prefill work added to the throughput busy accumulators:
+    # Σ over chunks of each op at the chunk's token count (same device),
+    # and of each flow's chunk-scaled payload (same channel)
+    p_pre = {o: np.zeros(K) for o in ops}
+    pcomm_pre = {q: np.zeros((K, K)) for q in comms}
+    if objective == "throughput" and prompt_len and prompt_len > 0:
+        from .simulate import (
+            prefill_chunk_sizes,
+            prefill_compute_time,
+            resolve_graph_seq_len,
+        )
+
+        s_graph = resolve_graph_seq_len(graph, graph_seq_len)
+        # chunk sizes repeat (all but the last are equal) — cost each
+        # distinct size once and multiply, like simulate.prefill_busy
+        counts: Dict[int, int] = {}
+        for toks in prefill_chunk_sizes(int(prompt_len), prefill_chunk):
+            counts[toks] = counts.get(toks, 0) + 1
+        for toks, n in counts.items():
+            for o in ops:
+                p_pre[o] = p_pre[o] + n * np.array([
+                    prefill_compute_time(cost, graph.nodes[o], k, toks, s_graph)
+                    for k in range(K)
+                ])
+            frac = float(toks) / float(s_graph)
+            for q in comms:
+                pcomm_pre[q] = pcomm_pre[q] + n * cost.comm_matrix(
+                    aug.comm[q].bytes * frac
+                )
 
     # schedule horizon (valid big-M): a feasible UB if given, else every task
     # once at its worst cost
@@ -226,10 +269,17 @@ def solve_placement(
     scale = 1e3 / H_raw  # rescale seconds so horizon ≈ 1e3
     for o in ops:
         p[o] = p[o] * scale
+        p_pre[o] = p_pre[o] * scale
     for q in comms:
         pcomm[q] = pcomm[q] * scale
+        pcomm_pre[q] = pcomm_pre[q] * scale
     H = 1e3
     Ms = Ml = Mr = H  # the paper's M^s, M^l, M^r
+    # busy time incl. prefill may exceed the (schedule) horizon H — T's own
+    # upper bound must leave room for the prefill share
+    H_pre = sum(float(v.max()) for v in p_pre.values()) + sum(
+        float(np.max(m)) if m.size else 0.0 for m in pcomm_pre.values()
+    )
 
     # ------------------------------------------------------------ variables
     # layout: [x (nops*K)] [S (nops+ncomm)] [C (nops+ncomm)] [z (ncomm)]
@@ -402,16 +452,20 @@ def solve_placement(
         # channel (a,b)'s is Σ_q p^comm_{q,a,b} u_{q,a,b} (u is pinned to the
         # actual endpoint devices by the Eq. 7 lower bounds, so the busy sum
         # cannot be understated by relaxing u).
+        # busy time includes the per-request prefill work (chunk passes run
+        # on the SAME device/channel the op's decode pass is placed on)
         for k in range(K):
             coeffs = {off_T: 1.0}
             for o in ops:
-                if p[o][k]:
-                    coeffs[xv(o, k)] = -float(p[o][k])
+                tk = float(p[o][k]) + float(p_pre[o][k])
+                if tk:
+                    coeffs[xv(o, k)] = -tk
             b.add(coeffs, 0.0, np.inf)
         for (a, bb) in chan_pairs:
             coeffs = {off_T: 1.0}
             for q in comms:
                 t = float(pcomm[q][a, bb]) if pcomm[q].size else 0.0
+                t += float(pcomm_pre[q][a, bb]) if pcomm_pre[q].size else 0.0
                 if t:
                     coeffs[uv(q, a, bb)] = -t
             if len(coeffs) > 1:
@@ -421,10 +475,10 @@ def solve_placement(
     lb = np.zeros(nvars)
     ub = np.ones(nvars)
     ub[off_S : off_z] = H          # S and C ranges
-    ub[off_T] = H
+    ub[off_T] = H + H_pre
     if upper_bound is not None and objective == "throughput":
         # bottleneck UB bounds T directly (same 20% incumbent slack as above)
-        ub[off_T] = min(H, upper_bound * scale * 1.2)
+        ub[off_T] = min(H + H_pre, upper_bound * scale * 1.2)
     integrality = np.zeros(nvars)
     integrality[off_x : off_x + nops * K] = 1
     integrality[off_z : off_z + ncomm] = 1
@@ -459,6 +513,7 @@ def solve_placement(
                 "message": str(res.message),
                 "milp_objective": objective,
                 "serving_slots": serving_slots,
+                "prompt_len": float(prompt_len),
                 "horizon_s": H_raw,
             },
         )
@@ -495,6 +550,7 @@ def solve_placement(
             "n_comm_pairs": len(comm_pairs),
             "milp_objective": objective,
             "serving_slots": serving_slots,
+            "prompt_len": float(prompt_len),
             "horizon_s": H_raw,
         },
     )

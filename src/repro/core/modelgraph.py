@@ -62,6 +62,7 @@ def transformer_graph(
     cfg: ModelConfig, *, seq_len: int, granularity: str = "fine"
 ) -> OpGraph:
     g = OpGraph(name=f"{cfg.name}-{granularity}")
+    g.seq_len = seq_len
     s, d = seq_len, cfg.d_model
     hd = cfg.resolved_head_dim
     h, kv = cfg.n_heads, cfg.n_kv_heads

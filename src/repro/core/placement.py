@@ -81,6 +81,17 @@ class PlanConfig:
         charges ``param_bytes + serving_slots × kv_bytes`` of resident
         memory per op in the MILP, every heuristic's memory cap, and
         candidate scoring.
+    prompt_len:
+        Expected prompt tokens per request (the workload assumption).  In
+        throughput mode every candidate's bottleneck score — and the MILP's
+        busy-time accumulators — include the per-request chunked-prefill
+        work this implies (``core.simulate.prefill_busy``), so prompt-heavy
+        workloads are no longer scored as if prompts were free.  ``0``
+        (default) keeps the decode-only scoring.
+    prefill_chunk:
+        Tokens per prefill chunk for that scoring AND the serving engine's
+        interleaved prefill state machine (the engine reads it off its
+        ``plan_cfg``); ``None`` means whole-prompt (blocking) prefill.
     coarsen:
         Apply GCOF fusion coarsening before solving (paper Fig. 10 c/d vs
         a/b).
@@ -116,6 +127,13 @@ class PlanConfig:
     # concurrent serving slots: Eq. 5 charges serving_slots × kv_bytes of
     # resident KV cache per op (the engine passes its slot count here)
     serving_slots: int = 1
+    # expected prompt tokens per request: throughput-mode scoring (and the
+    # MILP busy accumulators) charge the implied chunked-prefill work per
+    # request; 0 keeps decode-only scoring
+    prompt_len: int = 0
+    # prefill chunk size for that scoring and for the engine's interleaved
+    # prefill state machine; None = whole-prompt (blocking) prefill
+    prefill_chunk: Optional[int] = 64
     coarsen: bool = True             # GCOF (Fig. 10 c/d vs a/b)
     rules: Optional[Sequence[Sequence[str]]] = None
     time_limit: float = 120.0
@@ -169,6 +187,21 @@ def plan(
 
     from .simulate import bottleneck_time as _bneck, simulate as _sim
 
+    # prefill-aware throughput scoring needs the token count the graph costs
+    # were built at; coarsened/contracted work graphs lose the attribute, so
+    # resolve it from the ORIGINAL graph once
+    prompt = max(int(cfg.prompt_len), 0) if cfg.objective == "throughput" else 0
+    graph_seq_len = getattr(graph, "seq_len", None)
+
+    def _bneck_cfg(g_, pl) -> float:
+        """Bottleneck-stage time under the configured workload: decode plus
+        (with ``cfg.prompt_len``) each request's chunked-prefill work."""
+        return _bneck(
+            g_, pl, cost,
+            prompt_len=prompt, prefill_chunk=cfg.prefill_chunk,
+            graph_seq_len=graph_seq_len,
+        )
+
     def _score(g_, pl) -> float:
         """What a candidate placement is worth under the configured objective.
 
@@ -178,7 +211,7 @@ def plan(
         if slots > 1 and not cost.memory_ok(g_, pl, serving_slots=slots):
             return float("inf")
         if cfg.objective == "throughput":
-            return _bneck(g_, pl, cost)
+            return _bneck_cfg(g_, pl)
         return _sim(g_, pl, cost).makespan
 
     # the heuristic candidate pool (closed over the slot count so memory
@@ -241,7 +274,7 @@ def plan(
             if r.status != "feasible":
                 continue
             val = (
-                _bneck(target, r.placement, cost)
+                _bneck_cfg(target, r.placement)
                 if cfg.objective == "throughput"
                 else _sim(target, r.placement, cost).makespan
             )
@@ -255,6 +288,9 @@ def plan(
             upper_bound=ub,
             objective=cfg.objective,
             serving_slots=slots,
+            prompt_len=prompt,
+            prefill_chunk=cfg.prefill_chunk,
+            graph_seq_len=graph_seq_len,
         )
         if member_to_super is not None and res.placement:
             coarse_placement = lift_placement(member_to_super, res.placement)
@@ -336,6 +372,7 @@ def plan(
     res.extra["coarsened"] = cfg.coarsen
     res.extra["objective"] = cfg.objective
     res.extra["serving_slots"] = slots
+    res.extra["prompt_len"] = prompt
     res.extra["n_original"] = len(graph)
     res.extra["n_coarse"] = len(work)
     return res

@@ -49,10 +49,10 @@ from __future__ import annotations
 import heapq
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Mapping, Optional, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 from .costmodel import CostModel
-from .graph import AugmentedDAG, OpGraph, augment
+from .graph import AugmentedDAG, OpGraph, OpNode, augment
 
 
 @dataclass
@@ -115,6 +115,173 @@ def _device_busy(schedule: Mapping, k: int) -> float:
     return sum(
         r.end - r.start for r in schedule.values() if r.resource == ("dev", k)
     )
+
+
+# --------------------------------------------------------------------------
+# Chunked-prefill costing: score the prompt work the serving engine actually
+# runs (ISSUE 5).  A request with ``prompt_len`` tokens executes
+# ceil(prompt_len / prefill_chunk) prefill passes of the placed graph before
+# its decode pass; each pass's per-op cost is the graph node rescaled to the
+# chunk's token count (relative to the seq_len the node costs were counted
+# at), evaluated through the SAME roofline cost model on the SAME shared
+# device/channel resources.
+# --------------------------------------------------------------------------
+
+
+def prefill_chunk_sizes(prompt_len: int, prefill_chunk: Optional[int]) -> List[int]:
+    """Token counts of the prefill passes for one request's prompt.
+
+    ``prefill_chunk=None`` means whole-prompt (blocking) prefill — one pass;
+    ``prompt_len <= 0`` means no prefill work at all (the pre-ISSUE-5
+    decode-only request model)."""
+    p = int(prompt_len)
+    if p <= 0:
+        return []
+    c = int(prefill_chunk) if prefill_chunk else p
+    if c <= 0:
+        raise ValueError(f"prefill_chunk must be > 0 or None, got {prefill_chunk}")
+    return [min(c, p - i) for i in range(0, p, c)]
+
+
+def resolve_graph_seq_len(graph: OpGraph, seq_len: Optional[int]) -> int:
+    """The sequence length the graph's node costs were counted at —
+    an explicit override, else ``graph.seq_len`` (set by the model-graph
+    builders).  Prefill-aware scoring is meaningless without it."""
+    s = seq_len if seq_len is not None else getattr(graph, "seq_len", None)
+    if not s or int(s) <= 0:
+        raise ValueError(
+            "prefill-aware scoring needs the token count the graph costs were "
+            "built at: pass graph_seq_len=..., or use a graph whose builder "
+            "records .seq_len (core.modelgraph.transformer_graph does)"
+        )
+    return int(s)
+
+
+def scale_node_to_tokens(node: OpNode, tokens: int, seq_len: int) -> OpNode:
+    """A copy of ``node`` rescaled from ``seq_len`` tokens to ``tokens``.
+
+    Flops, activation HBM traffic, and the output payload scale with the
+    token count; resident weight traffic (``param_bytes``, streamed once per
+    pass regardless of chunk size) does not.  Attention's quadratic score
+    term is approximated linearly — the same fidelity the rest of the
+    roofline model runs at."""
+    frac = float(tokens) / float(seq_len)
+    serial = node.meta.get("serial") if node.meta else None
+    scaled = node.copy()
+    scaled.flops = node.flops * frac
+    inv = min(node.param_bytes, node.bytes_accessed)
+    scaled.bytes_accessed = inv + max(node.bytes_accessed - inv, 0.0) * frac
+    scaled.output_bytes = node.output_bytes * frac
+    if serial:
+        # hierarchy supernodes carry (flops, bytes, op_type) member triples
+        # with no per-member weight split: scale both terms linearly
+        scaled.meta = dict(node.meta)
+        scaled.meta["serial"] = [
+            (f * frac, nb * frac, ot) for f, nb, ot in serial
+        ]
+    return scaled
+
+
+def prefill_compute_time(
+    cost: CostModel, node: OpNode, device_idx: int, tokens: int, seq_len: int
+) -> float:
+    """p_ik of one ``tokens``-token prefill chunk of ``node`` (batch-1: the
+    serving engine prefills one slot row at a time)."""
+    return cost.compute_time(
+        scale_node_to_tokens(node, tokens, seq_len), device_idx
+    )
+
+
+def _resolve_prompt_lens(
+    n_requests: int, prompt_len: Union[None, int, Sequence[int]]
+) -> List[int]:
+    """Per-request prompt token counts from a scalar or sequence spec."""
+    if prompt_len is None:
+        return [0] * n_requests
+    if isinstance(prompt_len, (int, float)):
+        if prompt_len < 0:
+            raise ValueError(f"prompt_len must be >= 0, got {prompt_len}")
+        return [int(prompt_len)] * n_requests
+    lens = [int(p) for p in prompt_len]
+    if len(lens) != n_requests:
+        raise ValueError(
+            f"prompt_len sequence has {len(lens)} entries for {n_requests} requests"
+        )
+    if any(p < 0 for p in lens):
+        raise ValueError("prompt lengths must be >= 0")
+    return lens
+
+
+def _prefill_task_table(
+    graph: OpGraph,
+    placement: Mapping[int, int],
+    cost: CostModel,
+    aug: AugmentedDAG,
+    tokens: int,
+    seq_len: int,
+) -> Tuple[Dict[int, float], Dict[int, Tuple]]:
+    """(dur, resource) of one ``tokens``-token prefill pass of the placed
+    graph — same task ids, deps and resources as the decode pass
+    (``_task_table``), durations rescaled to the chunk's token count."""
+    dur: Dict[int, float] = {}
+    resource: Dict[int, Tuple] = {}
+    for nid, node in graph.nodes.items():
+        k = placement[nid]
+        dur[nid] = prefill_compute_time(cost, node, k, tokens, seq_len)
+        resource[nid] = ("dev", k)
+    frac = float(tokens) / float(seq_len)
+    for q, c in aug.comm.items():
+        ks, kd = placement[c.src], placement[c.dst]
+        if ks == kd:
+            dur[q] = 0.0
+            resource[q] = ("local",)
+        else:
+            dur[q] = cost.comm_time(c.bytes * frac, ks, kd)
+            resource[q] = ("chan", ks, kd)
+    return dur, resource
+
+
+def prefill_busy(
+    graph: OpGraph,
+    placement: Mapping[int, int],
+    cost: CostModel,
+    *,
+    prompt_len: int,
+    prefill_chunk: Optional[int] = None,
+    seq_len: Optional[int] = None,
+    aug: Optional[AugmentedDAG] = None,
+) -> Dict[Tuple, float]:
+    """Per-request prefill busy seconds by resource (device / directed
+    channel) — the chunked prompt work one request adds on top of its decode
+    pass.  Added to the decode busy by :func:`bottleneck_time` and mirrored
+    by the throughput MILP's busy-time accumulators."""
+    chunks = prefill_chunk_sizes(prompt_len, prefill_chunk)
+    busy: Dict[Tuple, float] = {}
+    if not chunks:
+        return busy
+    s = resolve_graph_seq_len(graph, seq_len)
+    aug = aug or augment(graph)
+    # chunk sizes repeat (all but the last are equal) — cost each distinct
+    # size once
+    counts: Dict[int, int] = {}
+    for t in chunks:
+        counts[t] = counts.get(t, 0) + 1
+    for t, n in counts.items():
+        for nid, node in graph.nodes.items():
+            k = placement[nid]
+            key = ("dev", k)
+            busy[key] = busy.get(key, 0.0) + n * prefill_compute_time(
+                cost, node, k, t, s
+            )
+        frac = float(t) / float(s)
+        for q, c in aug.comm.items():
+            ks, kd = placement[c.src], placement[c.dst]
+            if ks != kd:
+                key = ("chan", ks, kd)
+                busy[key] = busy.get(key, 0.0) + n * cost.comm_time(
+                    c.bytes * frac, ks, kd
+                )
+    return busy
 
 
 @dataclass
@@ -293,6 +460,10 @@ class PipelineResult:
     completions: List[float]                  # per-request completion times
     schedule: Dict[Tuple[int, int], TaskRecord]
     aug: AugmentedDAG
+    # per-request prefill chunk token counts ([] per request when the run
+    # was decode-only — the pre-ISSUE-5 request model).  Prefill tasks are
+    # keyed ``(rid, ("prefill", round, task_id))`` in ``schedule``.
+    prompt_chunks: List[List[int]] = field(default_factory=list)
 
     # ---------------------------------------------------------- throughput
     @property
@@ -396,6 +567,9 @@ def simulate_pipeline(
     max_in_flight: Optional[int] = None,
     batching: str = "ragged",
     decode_batch: int = 1,
+    prompt_len: Union[None, int, Sequence[int]] = None,
+    prefill_chunk: Optional[int] = None,
+    graph_seq_len: Optional[int] = None,
     aug: Optional[AugmentedDAG] = None,
 ) -> PipelineResult:
     """Simulate ``n_requests`` copies of the placed graph sharing one cluster.
@@ -423,7 +597,17 @@ def simulate_pipeline(
     ``decode_batch > 1`` applies the batch-aware cost model: each op is
     charged its amortized per-request time at that decode batch size
     (weight traffic streamed once per batched step), so ``slots > 1`` plans
-    are scored the way the batched engine actually runs them."""
+    are scored the way the batched engine actually runs them.
+
+    ``prompt_len`` (scalar, or one entry per request) gives each request a
+    chunked-prefill phase before its decode pass: ceil(prompt_len /
+    prefill_chunk) sequential prefill passes of the placed graph (whole-
+    prompt when ``prefill_chunk`` is None), each costed at its chunk's token
+    count relative to ``graph_seq_len`` (default: ``graph.seq_len``) and
+    contending for the SAME devices and channels as every other request's
+    work — prompt-heavy workloads are no longer scored as if prompts were
+    free.  ``prompt_len=None``/``0`` reproduces the decode-only request
+    model exactly."""
     if n_requests < 1:
         raise ValueError("n_requests must be >= 1")
     if batching not in ("ragged", "lockstep"):
@@ -440,43 +624,79 @@ def simulate_pipeline(
         graph, placement, cost, aug, decode_batch
     )
     roots = [t for t, d in deps.items() if not d]
-    tasks_per_request = len(dur)
 
-    # --- event loop over (request, task) keys -----------------------------
+    # per-request prefill rounds: round r < n_chunks runs the r-th prefill
+    # chunk (whole graph, chunk-scaled durations), round n_chunks is the
+    # decode pass.  Chunks are sequential (round r+1's roots release when
+    # round r fully completes — the engine writes chunk r's KV before
+    # running chunk r+1).
+    prompt_lens = _resolve_prompt_lens(n_requests, prompt_len)
+    chunks_of = [prefill_chunk_sizes(p, prefill_chunk) for p in prompt_lens]
+    pre_tables: Dict[int, Tuple[Dict[int, float], Dict[int, Tuple]]] = {}
+    if any(chunks_of):
+        s_graph = resolve_graph_seq_len(graph, graph_seq_len)
+        for toks in {t for ch in chunks_of for t in ch}:
+            pre_tables[toks] = _prefill_task_table(
+                graph, placement, cost, aug, toks, s_graph
+            )
+    n_rounds = [len(ch) + 1 for ch in chunks_of]   # prefill rounds + decode
+
+    def round_tables(rid: int, r: int) -> Tuple[Dict[int, float], Dict[int, Tuple]]:
+        if r < len(chunks_of[rid]):
+            return pre_tables[chunks_of[rid][r]]
+        return dur, resource
+
+    def sched_key(rid: int, r: int, task: int):
+        # decode-round records keep the pre-ISSUE-5 ``(rid, task)`` key;
+        # prefill records are namespaced so consumers can tell them apart
+        if r == n_rounds[rid] - 1:
+            return (rid, task)
+        return (rid, ("prefill", r, task))
+
+    # --- event loop over (request, round, task) keys ----------------------
     # A request's roots enter the ready queues only via an ADMISSION event at
     # its release time, so every queued task is ready "now" — a freed device
     # never commits to a future-ready task over one that becomes ready
     # sooner (future arrivals would otherwise cause head-of-line blocking).
-    ready: Dict[Tuple, List[Tuple[float, int, int]]] = {}
+    ready: Dict[Tuple, List[Tuple[float, int, int, int]]] = {}
     free_at: Dict[Tuple, float] = {}
-    running: Dict[Tuple, Optional[Tuple[int, int]]] = {}
+    running: Dict[Tuple, Optional[Tuple[int, int, int]]] = {}
 
-    # events: (time, seq, ("task", rid, tid)) | (time, seq, ("admit", rid))
+    # events: (time, seq, ("task", rid, r, tid)) | (time, seq, ("admit", rid))
     events: List[Tuple[float, int, Tuple]] = []
     seq = 0
-    schedule: Dict[Tuple[int, int], TaskRecord] = {}
-    remaining = {r: tasks_per_request for r in range(n_requests)}
-    n_deps: Dict[Tuple[int, int], int] = {}
+    schedule: Dict[Tuple, TaskRecord] = {}
+    tasks_per_round = len(dur)
+    remaining_round = {
+        (rid, r): tasks_per_round
+        for rid in range(n_requests)
+        for r in range(n_rounds[rid])
+    }
+    n_deps: Dict[Tuple[int, int, int], int] = {}
     completions = [0.0] * n_requests
     completed_requests = 0
 
-    def _kind(task: int) -> str:
-        return "op" if task in graph.nodes else "comm"
+    def _kind(r: int, rid: int, task: int) -> str:
+        base = "op" if task in graph.nodes else "comm"
+        return base if r == n_rounds[rid] - 1 else f"prefill-{base}"
 
     def push_event(t: float, payload: Tuple):
         nonlocal seq
         heapq.heappush(events, (t, seq, payload))
         seq += 1
 
-    def push_ready(rid: int, task: int, t: float):
-        res = resource[task]
-        if res == ("local",) or dur[task] == 0.0:
-            push_event(t, ("task", rid, task))
-            schedule[(rid, task)] = TaskRecord(task, _kind(task), res, t, t)
+    def push_ready(rid: int, r: int, task: int, t: float):
+        rdur, rres = round_tables(rid, r)
+        res = rres[task]
+        if res == ("local",) or rdur[task] == 0.0:
+            push_event(t, ("task", rid, r, task))
+            schedule[sched_key(rid, r, task)] = TaskRecord(
+                task, _kind(r, rid, task), res, t, t
+            )
             return
-        # earliest-ready-first; ties broken by (request, task) id so that a
-        # single request reproduces `simulate`'s dispatch order exactly
-        heapq.heappush(ready.setdefault(res, []), (t, rid, task))
+        # earliest-ready-first; ties broken by (request, round, task) id so
+        # that a single request reproduces `simulate`'s dispatch order exactly
+        heapq.heappush(ready.setdefault(res, []), (t, rid, r, task))
         try_start(res, t)
 
     def try_start(res: Tuple, now: float):
@@ -485,16 +705,20 @@ def simulate_pipeline(
         q = ready.get(res)
         if not q:
             return
-        rt, rid, task = heapq.heappop(q)
+        rt, rid, r, task = heapq.heappop(q)
+        rdur, _ = round_tables(rid, r)
         start = max(rt, free_at.get(res, 0.0), now)
-        end = start + dur[task]
-        running[res] = (rid, task)
-        schedule[(rid, task)] = TaskRecord(task, _kind(task), res, start, end)
-        push_event(end, ("task", rid, task))
+        end = start + rdur[task]
+        running[res] = (rid, r, task)
+        schedule[sched_key(rid, r, task)] = TaskRecord(
+            task, _kind(r, rid, task), res, start, end
+        )
+        push_event(end, ("task", rid, r, task))
 
     for rid in range(n_requests):
-        for task, d in deps.items():
-            n_deps[(rid, task)] = len(d)
+        for r in range(n_rounds[rid]):
+            for task, d in deps.items():
+                n_deps[(rid, r, task)] = len(d)
 
     slots = max_in_flight if max_in_flight is not None else n_requests
     if slots < 1:
@@ -526,35 +750,41 @@ def simulate_pipeline(
         if payload[0] == "admit":
             rid = payload[1]
             for task in roots:
-                push_ready(rid, task, t)
+                push_ready(rid, 0, task, t)
             continue
-        _, rid, task = payload
+        _, rid, r, task = payload
         makespan = max(makespan, t)
-        res = resource[task]
-        if res != ("local",) and dur[task] > 0.0:
+        rdur, rres = round_tables(rid, r)
+        res = rres[task]
+        if res != ("local",) and rdur[task] > 0.0:
             running[res] = None
             free_at[res] = t
-        remaining[rid] -= 1
-        if remaining[rid] == 0:
-            completions[rid] = t
-            completed_requests += 1
-            if batching == "lockstep":
-                wave_open -= 1
-                if wave_open == 0 and next_admit < n_requests:
-                    admit_wave(t)
-            elif next_admit < n_requests:
-                # ragged admit-on-retire: the freed slot is refilled NOW
-                push_event(max(t, arrivals[next_admit]), ("admit", next_admit))
-                next_admit += 1
+        remaining_round[(rid, r)] -= 1
+        if remaining_round[(rid, r)] == 0:
+            if r < n_rounds[rid] - 1:
+                # this prefill chunk's KV is written — release the next round
+                for root in roots:
+                    push_ready(rid, r + 1, root, t)
+            else:
+                completions[rid] = t
+                completed_requests += 1
+                if batching == "lockstep":
+                    wave_open -= 1
+                    if wave_open == 0 and next_admit < n_requests:
+                        admit_wave(t)
+                elif next_admit < n_requests:
+                    # ragged admit-on-retire: the freed slot is refilled NOW
+                    push_event(max(t, arrivals[next_admit]), ("admit", next_admit))
+                    next_admit += 1
         for dep in fanout.get(task, []):
-            n_deps[(rid, dep)] -= 1
-            if n_deps[(rid, dep)] == 0:
-                push_ready(rid, dep, t)
-        if res != ("local",) and dur[task] > 0.0:
+            n_deps[(rid, r, dep)] -= 1
+            if n_deps[(rid, r, dep)] == 0:
+                push_ready(rid, r, dep, t)
+        if res != ("local",) and rdur[task] > 0.0:
             try_start(res, t)
 
     if completed_requests != n_requests:
-        unfinished = [r for r, n in remaining.items() if n]
+        unfinished = sorted({r for (r, _), n in remaining_round.items() if n})
         raise RuntimeError(
             f"pipeline simulation deadlock; unfinished requests: {unfinished[:10]}"
         )
@@ -566,6 +796,7 @@ def simulate_pipeline(
         completions=completions,
         schedule=schedule,
         aug=aug,
+        prompt_chunks=chunks_of,
     )
 
 
@@ -579,7 +810,10 @@ def validate_pipeline_schedule(
 ) -> None:
     """Every MILP constraint family, extended across requests: per-request
     precedence through comm nodes, zero-cost co-located flows, and
-    non-overlap per shared resource over ALL requests' tasks."""
+    non-overlap per shared resource over ALL requests' tasks.  Runs with
+    prefill rounds too (``prompt_len > 0``): each prefill pass obeys the
+    same precedence/flow families, chunks execute strictly in order, and
+    the decode pass starts only after the last chunk."""
     sched = result.schedule
     aug = result.aug
 
@@ -590,6 +824,35 @@ def validate_pipeline_schedule(
         for q, c in aug.comm.items():
             if placement[c.src] == placement[c.dst]:
                 assert sched[(rid, q)].end - sched[(rid, q)].start <= atol
+
+    # prefill rounds: same families per chunk, plus strict chunk ordering
+    chunks_of = result.prompt_chunks or [[] for _ in range(result.n_requests)]
+    for rid, chunks in enumerate(chunks_of):
+        prev_end = None
+        for r in range(len(chunks)):
+            key = lambda t: (rid, ("prefill", r, t))
+            for (u, v), q in aug.edge_to_comm.items():
+                assert sched[key(u)].end <= sched[key(q)].start + atol
+                assert sched[key(q)].end <= sched[key(v)].start + atol
+            for q, c in aug.comm.items():
+                if placement[c.src] == placement[c.dst]:
+                    assert sched[key(q)].end - sched[key(q)].start <= atol
+            recs = [sched[key(t)] for t in list(graph.nodes) + list(aug.comm)]
+            assert all(rec.kind.startswith("prefill-") for rec in recs)
+            start = min(rec.start for rec in recs)
+            if prev_end is not None:
+                assert start >= prev_end - atol, (
+                    f"request {rid} prefill chunk {r} starts before chunk "
+                    f"{r - 1} completes"
+                )
+            prev_end = max(rec.end for rec in recs)
+        if chunks:
+            decode_start = min(
+                sched[(rid, t)].start for t in list(graph.nodes) + list(aug.comm)
+            )
+            assert decode_start >= prev_end - atol, (
+                f"request {rid} decode starts before its prefill completes"
+            )
 
     for nid in graph.nodes:
         assert 0 <= placement[nid] < cost.cluster.k
@@ -614,6 +877,9 @@ def bottleneck_time(
     cost: CostModel,
     *,
     decode_batch: int = 1,
+    prompt_len: int = 0,
+    prefill_chunk: Optional[int] = None,
+    graph_seq_len: Optional[int] = None,
     aug: Optional[AugmentedDAG] = None,
 ) -> float:
     """Per-request busy time of the most loaded resource (device or channel).
@@ -624,7 +890,10 @@ def bottleneck_time(
     critical-path length (pipeline fill), which only affects latency.
     ``decode_batch > 1`` charges ops their batch-aware amortized per-request
     cost (one weight stream per batched decode step — see
-    ``CostModel.compute_time``)."""
+    ``CostModel.compute_time``).  ``prompt_len > 0`` adds each request's
+    chunked-prefill work (``prefill_chunk`` tokens per pass, whole-prompt
+    when None) to the same per-resource busy sums — prompt-heavy workloads
+    stop scoring as if prompts were free (see :func:`prefill_busy`)."""
     aug = aug or augment(graph)
     busy: Dict[Tuple, float] = {}
     for nid, node in graph.nodes.items():
@@ -638,6 +907,13 @@ def bottleneck_time(
         if ks != kd:
             key = ("chan", ks, kd)
             busy[key] = busy.get(key, 0.0) + cost.comm_time(c.bytes, ks, kd)
+    if prompt_len and prompt_len > 0:
+        for key, t in prefill_busy(
+            graph, placement, cost,
+            prompt_len=prompt_len, prefill_chunk=prefill_chunk,
+            seq_len=graph_seq_len, aug=aug,
+        ).items():
+            busy[key] = busy.get(key, 0.0) + t
     return max(busy.values()) if busy else 0.0
 
 

@@ -50,6 +50,23 @@ def main(argv=None):
         "lockstep = seed-engine equal-depth cohorts (benchmark baseline)",
     )
     ap.add_argument(
+        "--prefill-chunk", type=int, default=64, metavar="TOKENS",
+        help="interleave prompt prefill with decode in chunks of this many "
+        "tokens (0 = blocking whole-prompt prefill at admission); also the "
+        "chunk size the planner's prefill-aware throughput scoring assumes",
+    )
+    ap.add_argument(
+        "--prompt-len", type=int, default=0, metavar="TOKENS",
+        help="expected prompt tokens per request: lets the throughput "
+        "planner charge each request's chunked-prefill work when scoring "
+        "placements (0 = decode-only scoring)",
+    )
+    ap.add_argument(
+        "--oversize", choices=("truncate", "reject"), default="truncate",
+        help="requests whose prompt+max_new_tokens overflow --max-len are "
+        "truncated (oldest prompt tokens dropped, flagged) or rejected",
+    )
+    ap.add_argument(
         "--derate-state", default=None, metavar="PATH",
         help="persist the adaptive derate policy's state here; a restarted "
         "engine resumes its learned derates instead of re-observing",
@@ -67,7 +84,15 @@ def main(argv=None):
     engine = ServingEngine(
         cfg, params, cluster,
         slots=args.slots, max_len=args.max_len,
-        plan_cfg=PlanConfig(method=args.method, time_limit=20, mip_rel_gap=0.05),
+        plan_cfg=PlanConfig(
+            method=args.method, time_limit=20, mip_rel_gap=0.05,
+            # mirror the engine's own default: serving >1 slot is a
+            # pipelined workload, scored by bottleneck-stage time — and
+            # prefill-aware scoring (--prompt-len) only exists there
+            objective="throughput" if args.slots > 1 else "latency",
+            prefill_chunk=args.prefill_chunk or None,
+            prompt_len=args.prompt_len,
+        ),
         eos_id=-1,
         # short windows can't carry the default 4-sample evidence minimum —
         # scale it down so --adapt-every 1..3 still observes (and acts)
@@ -80,11 +105,14 @@ def main(argv=None):
         ),
         admission=args.admission,
         batching=args.batching,
+        oversize=args.oversize,
     )
     print(
         f"[serve] {args.arch}: placement={engine.placement_result.method} "
         f"stages={len(engine.executor.stages)} devices={len(engine.devices)} "
-        f"adapt_every={args.adapt_every or 'off'}"
+        f"adapt_every={args.adapt_every or 'off'} "
+        "prefill_chunk="
+        f"{engine.prefill_chunk if engine._chunked_prefill_on() else 'blocking'}"
     )
     t0 = time.perf_counter()
     reqs = [

@@ -232,6 +232,43 @@ def prefill(params, batch, cfg: ModelConfig, max_len: Optional[int] = None):
     return logits[:, -1], {"self": new_self, "cross": cross_cache}
 
 
+def prefill_chunked(
+    params,
+    batch,
+    cfg: ModelConfig,
+    max_len: Optional[int] = None,
+    *,
+    chunk: int = 64,
+):
+    """Chunked decoder prefill: the encoder runs once (cross K/V cached as
+    in :func:`prefill`), then the decoder prompt is teacher-forced in
+    ``chunk``-token pieces with the self-attention cache carried across
+    boundaries — greedy-token-identical to the whole-prompt pass."""
+    if chunk <= 0:
+        raise ValueError(f"chunk must be > 0, got {chunk}")
+    memory = encode(params, batch["frames"], cfg)
+    if cfg.scan_layers:
+        ck, cv = jax.vmap(lambda lp: _cross_kv(lp, memory, cfg))(params["decoder"])
+    else:
+        kvs = [_cross_kv(lp, memory, cfg) for lp in params["decoder"]]
+        ck = jnp.stack([k for k, _ in kvs])
+        cv = jnp.stack([v for _, v in kvs])
+    cross_cache = {"k": ck, "v": cv}
+    b, s = batch["tokens"].shape
+    self_cache = init_self_cache(cfg, b, max_len or s)
+    logits = None
+    off = 0
+    while off < s:
+        n = min(chunk, s - off)
+        logits, self_cache = decode_stack(
+            params, batch["tokens"][:, off : off + n], cfg,
+            cross_cache=cross_cache, self_cache=self_cache,
+            cache_pos=jnp.asarray(off, jnp.int32),
+        )
+        off += n
+    return logits[:, -1], {"self": self_cache, "cross": cross_cache}
+
+
 def decode_step(params, token_batch, caches, cache_pos, cfg: ModelConfig):
     """One-token decoder step; ``cache_pos`` is a scalar or a ``(B,)`` int32
     vector (ragged batch — per-row self-attention cache depth)."""

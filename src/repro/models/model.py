@@ -22,6 +22,10 @@ class Model:
     init: Callable[..., Any]
     train_forward: Callable[..., Tuple[jax.Array, jax.Array]]
     prefill: Callable[..., Tuple[jax.Array, Any]]
+    # chunked prefill (prompt consumed in fixed-token pieces, state carried
+    # across boundaries) — greedy-token-identical to `prefill`; the unit the
+    # serving engine interleaves with ragged decode steps
+    prefill_chunked: Callable[..., Tuple[jax.Array, Any]]
     decode_step: Callable[..., Tuple[jax.Array, Any]]
     init_cache: Callable[..., Any]
 
@@ -33,6 +37,9 @@ def build_model(cfg: ModelConfig) -> Model:
             init=lambda key: encdec.init_params(key, cfg),
             train_forward=lambda p, b: encdec.train_forward(p, b, cfg),
             prefill=lambda p, b, max_len=None: encdec.prefill(p, b, cfg, max_len),
+            prefill_chunked=lambda p, b, max_len=None, chunk=64: encdec.prefill_chunked(
+                p, b, cfg, max_len, chunk=chunk
+            ),
             decode_step=lambda p, t, c, pos: encdec.decode_step(p, t, c, pos, cfg),
             # cross cache length = encoder frame count (same seq grid here)
             init_cache=lambda b, s: {
@@ -45,6 +52,9 @@ def build_model(cfg: ModelConfig) -> Model:
         init=lambda key: transformer.init_params(key, cfg),
         train_forward=lambda p, b: transformer.train_forward(p, b, cfg),
         prefill=lambda p, b, max_len=None: transformer.prefill(p, b, cfg, max_len),
+        prefill_chunked=lambda p, b, max_len=None, chunk=64: transformer.prefill_chunked(
+            p, b, cfg, max_len, chunk=chunk
+        ),
         decode_step=lambda p, t, c, pos: transformer.decode_step(p, t, c, pos, cfg),
         init_cache=lambda b, s: transformer.init_cache(cfg, b, s),
     )

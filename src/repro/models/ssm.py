@@ -193,6 +193,32 @@ def mamba2_block(
         C_ = Cc.reshape(b, s, g, n)
         y, final = ssd_chunked(xs, dt, A, B_, C_, cfg.ssm_chunk)
         new_state = {"ssm": final, "conv_x": tails["x"], "conv_B": tails["B"], "conv_C": tails["C"]}
+    elif s > 1:
+        # chunked-prefill continuation: the recurrent state carries across
+        # chunk boundaries — the causal conv's left context is the previous
+        # chunk's last W-1 pre-activation inputs (the stored tails), and the
+        # SSD scan seeds from the carried ssm state.  With zero state this
+        # is bit-for-bit the fresh-prefill path above.
+        width = p["conv_x"].shape[0]
+
+        def conv_cont(v_new, st, w, bias):
+            full = jnp.concatenate([st, v_new], axis=1)     # [B, W-1+s, ch]
+            out = jnp.zeros_like(v_new)
+            for i in range(width):
+                out = out + full[:, i : i + s, :] * w[i]
+            tail = full[:, full.shape[1] - (width - 1):]
+            return jax.nn.silu(out + bias), tail
+
+        xc, new_cx = conv_cont(xr, state["conv_x"], p["conv_x"], p["b_x"])
+        Bc, new_cB = conv_cont(Br, state["conv_B"], p["conv_B"], p["b_B"])
+        Cc, new_cC = conv_cont(Cr, state["conv_C"], p["conv_C"], p["b_C"])
+        xs = xc.reshape(b, s, h, pdim)
+        B_ = Bc.reshape(b, s, g, n)
+        C_ = Cc.reshape(b, s, g, n)
+        y, final = ssd_chunked(
+            xs, dt, A, B_, C_, cfg.ssm_chunk, init_state=state["ssm"]
+        )
+        new_state = {"ssm": final, "conv_x": new_cx, "conv_B": new_cB, "conv_C": new_cC}
     else:
         # single-token recurrent step: s == 1
         width = p["conv_x"].shape[0]

@@ -294,11 +294,15 @@ def _dense_stack(params, x, cfg, positions, caches, cache_pos):
 
 
 def _ssm_stack(params, x, cfg, caches, cache_pos=None):
-    decode = caches is not None and x.shape[1] == 1 and cache_pos is not None
+    # continuation (decode step OR a chunked-prefill chunk): the recurrent
+    # state carries in — mamba2_block picks the single-token or the
+    # chunk-continuation path from the sequence length.  cache_pos=None is
+    # the fresh whole-prompt prefill (state starts at zero).
+    cont = caches is not None and cache_pos is not None
 
     def one(x, layer_p, state):
         h = rmsnorm(x, layer_p["ln"])
-        out, new_state = mamba2_block(layer_p["mamba"], h, cfg, state=state if decode else None)
+        out, new_state = mamba2_block(layer_p["mamba"], h, cfg, state=state if cont else None)
         return x + out, new_state
 
     if cfg.scan_layers:
@@ -325,7 +329,9 @@ def _hybrid_stack(params, x, x_embed, cfg, positions, caches, cache_pos):
     """Zamba2: mamba trunk in segments; shared attn block every N layers."""
     every = cfg.shared_attn_every
     n_shared = cfg.n_layers // every
-    decode = x.shape[1] == 1 and cache_pos is not None
+    # cache_pos given = continuation (decode, or a chunked-prefill chunk):
+    # mamba state carries across the boundary; None = fresh whole prefill
+    cont = cache_pos is not None
     attn_pos = cache_pos if cache_pos is not None else jnp.zeros((), jnp.int32)
 
     def mamba_seg(x, seg_params, seg_states):
@@ -333,7 +339,7 @@ def _hybrid_stack(params, x, x_embed, cfg, positions, caches, cache_pos):
             layer_p, state = xs
             out, new_state = mamba2_block(
                 layer_p["mamba"], rmsnorm(x, layer_p["ln"]), cfg,
-                state=state if decode else None,
+                state=state if cont else None,
             )
             return x + out, new_state
 
@@ -366,7 +372,7 @@ def _hybrid_stack(params, x, x_embed, cfg, positions, caches, cache_pos):
         u = jnp.concatenate([x, x_embed], axis=-1) @ params["shared_proj_in"]
         cache_i = (
             {"k": caches["attn"]["k"][seg], "v": caches["attn"]["v"][seg]}
-            if decode or caches is not None
+            if cont or caches is not None
             else None
         )
         big = jnp.asarray(1 << 30, jnp.int32)
@@ -454,6 +460,49 @@ def prefill(params, batch, cfg: ModelConfig, max_len: Optional[int] = None):
         logits, caches, _ = forward(
             params, batch, cfg, caches=caches, cache_pos=jnp.zeros((), jnp.int32)
         )
+    return logits[:, -1], caches
+
+
+def prefill_chunked(
+    params,
+    batch,
+    cfg: ModelConfig,
+    max_len: Optional[int] = None,
+    *,
+    chunk: int = 64,
+):
+    """Chunked prefill: run the prompt in ``chunk``-token pieces, carrying
+    the caches across chunk boundaries — greedy-token-identical to
+    :func:`prefill`.
+
+    Every family carries its state through the boundary: dense/MoE write
+    each chunk's KV at its absolute offset (per-chunk positions offset by
+    ``cache_pos``, so RoPE and the causal/sliding-window masks match the
+    whole-prompt pass), SSM/hybrid thread the recurrent ssm state and the
+    causal-conv tails (see :func:`repro.models.ssm.mamba2_block`).  This is
+    the unit the serving engine's interleaved prefill state machine
+    executes between ragged decode steps."""
+    if cfg.frontend in ("patch_stub", "frame_stub"):
+        b, s = batch["embeds"].shape[:2]
+    else:
+        b, s = batch["tokens"].shape
+    if chunk <= 0:
+        raise ValueError(f"chunk must be > 0, got {chunk}")
+    max_len = max_len or s
+    caches = init_cache(cfg, b, max_len)
+    logits = None
+    off = 0
+    while off < s:
+        n = min(chunk, s - off)
+        sub = dict(batch)
+        for key in ("tokens", "embeds"):
+            if key in sub:
+                sub[key] = sub[key][:, off : off + n]
+        logits, caches, _ = forward(
+            params, sub, cfg, caches=caches,
+            cache_pos=jnp.asarray(off, jnp.int32),
+        )
+        off += n
     return logits[:, -1], caches
 
 

@@ -41,7 +41,20 @@
 * **KV-aware admission**: a request is only admitted when the KV-cache
   residency of ``active+1`` concurrent sequences still fits every planned
   device (runtime Eq. 5) — plan-time ``serving_slots`` sizing is necessary
-  but not sufficient after failures/derates shrink the effective cluster.
+  but not sufficient after failures/derates shrink the effective cluster,
+* **chunked prefill interleaved with ragged decode** (default in ragged
+  mode): an admitted request's prompt is consumed ``prefill_chunk`` tokens
+  at a time — each chunk is one batch-1 forward into that slot's cache row
+  at its ``cache_pos``, run BETWEEN batched decode steps (at most one chunk
+  per engine step, round-robin over mid-prefill slots), so a single long
+  prompt can no longer head-of-line-block decode on every active slot the
+  way the inline whole-prompt prefill did.  ``prefill_chunk=None`` restores
+  the blocking whole-prompt prefill (and lockstep batching always uses it —
+  the seed baseline).  Re-queued hot-swap requests re-prefill
+  prompt+generated through the same chunked state machine.  Prefill
+  forwards are tagged so observation windows feed the derate calibrator
+  decode samples only — a burst of long prompts must not read as device
+  drift.
 """
 
 from __future__ import annotations
@@ -73,8 +86,11 @@ class Request:
     ``out_tokens`` until ``max_new_tokens``, EOS, or the engine's
     ``max_len``.  ``done`` flips when the request reaches ANY terminal
     state; ``rejected`` additionally flips (with ``out_tokens`` left
-    empty) when KV-aware admission (``admission="reject"``) turned the
-    request away — check it before reading ``out_tokens``.
+    empty) when KV-aware admission (``admission="reject"``) or oversize
+    validation (``oversize="reject"``) turned the request away — check it
+    before reading ``out_tokens``.  ``truncated`` flips when
+    ``oversize="truncate"`` had to drop the prompt's oldest tokens to fit
+    ``prompt + max_new_tokens`` inside the engine's cache capacity.
     """
 
     rid: int
@@ -83,6 +99,7 @@ class Request:
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
     rejected: bool = False
+    truncated: bool = False
 
 
 class ServingEngine:
@@ -115,7 +132,23 @@ class ServingEngine:
             ``"lockstep"`` shares one position across the batch and admits
             only equal-depth cohorts (the seed-engine behavior, kept as the
             benchmark baseline).
+        prefill_chunk: tokens consumed per interleaved prefill chunk;
+            ``None`` = blocking whole-prompt prefill at admission (the
+            pre-ISSUE-5 behavior).  Defaults to the plan config's
+            ``prefill_chunk`` so the planner scores the prefill schedule
+            the engine actually runs.  Chunking engages in ragged batching
+            only — lockstep keeps the seed engine's blocking prefill.
+        oversize: what to do with a request whose ``prompt +
+            max_new_tokens`` cannot fit a ``max_len`` cache row:
+            ``"truncate"`` (default) drops the OLDEST prompt tokens to fit
+            and flags ``Request.truncated``; ``"reject"`` retires it
+            immediately with ``rejected=True``.  Without this check an
+            oversized prompt silently clamps/corrupts the slot's cache row
+            (``_maybe_retire``'s capacity check only fires post-hoc).
     """
+
+    # sentinel: "take prefill_chunk from the plan config"
+    _FROM_PLAN = object()
 
     def __init__(
         self,
@@ -132,6 +165,8 @@ class ServingEngine:
         adapt: Optional[AdaptationConfig] = None,
         admission: str = "queue",
         batching: str = "ragged",
+        prefill_chunk: Any = _FROM_PLAN,
+        oversize: str = "truncate",
     ):
         self.cfg = cfg
         self.params = params
@@ -149,6 +184,11 @@ class ServingEngine:
                 f"batching must be 'ragged' or 'lockstep', got {batching!r}"
             )
         self.batching = batching
+        if oversize not in ("truncate", "reject"):
+            raise ValueError(
+                f"oversize must be 'truncate' or 'reject', got {oversize!r}"
+            )
+        self.oversize = oversize
         # serving >1 slot is a pipelined workload: optimize steady-state
         # throughput (bottleneck-stage time), not single-query makespan, and
         # charge Eq. 5 one resident KV-cache copy per slot so the planner
@@ -167,6 +207,16 @@ class ServingEngine:
             # placements whose per-slot KV residency overflows device memory
             plan_cfg = dataclasses.replace(plan_cfg, serving_slots=slots)
         self.plan_cfg = plan_cfg
+
+        # interleaved prefill: chunk size comes from the plan config unless
+        # overridden, so "score what the engine runs" holds by construction
+        if prefill_chunk is ServingEngine._FROM_PLAN:
+            prefill_chunk = self.plan_cfg.prefill_chunk
+        if prefill_chunk is not None and int(prefill_chunk) <= 0:
+            raise ValueError(
+                f"prefill_chunk must be a positive int or None, got {prefill_chunk!r}"
+            )
+        self.prefill_chunk = None if prefill_chunk is None else int(prefill_chunk)
 
         # adaptation loop state: the policy owns streaks/hysteresis, the
         # engine owns the applied derate map and the (derated) cost model.
@@ -199,6 +249,12 @@ class ServingEngine:
         # retain every historical request's token lists forever)
         self.finished: Deque[Request] = deque(maxlen=4096)
         self._finish_sink: Optional[List[Request]] = None
+        # requests rejected AT SUBMIT time (oversize validation) — delivered
+        # by the next run_until_drained call so its return list never
+        # silently drops a rejection; bounded like the finished ring, and
+        # deliberately NOT fed by step()-driven completions (those belong to
+        # whichever drain call — if any — is active when they retire)
+        self._unclaimed_finished: Deque[Request] = deque(maxlen=4096)
         self.active: List[Optional[Request]] = [None] * slots
         self.slot_pos = np.zeros(slots, dtype=np.int64)
         self.caches = None
@@ -227,15 +283,33 @@ class ServingEngine:
         )
         self.executor = StageExecutor(self.cfg, self.params, stages)
         self.caches = None  # caches are invalid after a topology change
+        # ...and so is any mid-prefill progress: the chunks written so far
+        # lived in the old executor's cache rows
+        self._prefill_toks: Dict[int, List[int]] = {}
+        self._prefill_done: Dict[int, int] = {}
+        self._prefill_rr = 0
         self._pred_stage_s = self._predict_stage_times()
+        # per-chunk predictions only make sense when prefill actually runs
+        # in chunks — blocking/lockstep prefill forwards span whole prompts
+        # of varying length, which no single prediction can anchor
+        self._pred_prefill_stage_s = (
+            self._predict_prefill_stage_times(self.prefill_chunk)
+            if self._chunked_prefill_on()
+            else []
+        )
         # per-stage op-class weights are fixed between rebuilds — compute
         # once, not every observation window
         self._stage_classes = [
             self._stage_class_weights(i) for i in range(len(stages))
         ]
         # whole-run observation history for reporting (windows DRAIN the
-        # executor's recorders; straggler_report must still see the run)
+        # executor's recorders; straggler_report must still see the run).
+        # Decode and prefill are kept apart: the derate loop consumes only
+        # decode samples, prefill shows up in its own report section.
         self._observed_history: List[Deque[float]] = [
+            deque(maxlen=4096) for _ in stages
+        ]
+        self._observed_prefill_history: List[Deque[float]] = [
             deque(maxlen=4096) for _ in stages
         ]
         # KV-aware admission width: memory_ok is monotone in serving_slots,
@@ -252,7 +326,28 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
-        """Enqueue a request; admission happens on the next :meth:`step`."""
+        """Enqueue a request; admission happens on the next :meth:`step`.
+
+        Oversize validation happens HERE, not at admission: a prompt whose
+        ``prompt + max_new_tokens`` cannot fit a ``max_len`` cache row would
+        silently clamp/corrupt the slot's KV (the retirement-time capacity
+        check only fires after the damage).  Per the ``oversize`` policy the
+        request is either truncated (oldest prompt tokens dropped, flagged
+        ``truncated=True``) or rejected outright."""
+        budget = self.max_len - int(req.max_new_tokens)
+        if len(req.prompt) > budget:
+            if self.oversize == "reject" or budget < 1:
+                # budget < 1: even an empty prompt cannot fit the requested
+                # generation — truncation cannot save it
+                req.rejected = True
+                req.done = True
+                self._record_finished(req)
+                if self._finish_sink is None:
+                    # no drain call active: hold the reject for the next one
+                    self._unclaimed_finished.append(req)
+                return
+            req.prompt = list(req.prompt[-budget:])   # keep the newest context
+            req.truncated = True
         self.queue.append(req)
 
     def _admission_ok(self, n_in_flight: int) -> bool:
@@ -308,10 +403,24 @@ class ServingEngine:
                     break  # "queue": retry when a slot's KV frees
                 req = self.queue.pop(0)
                 self.active[slot] = req
-                # prefill this slot (batch-1 prefill into the slot's cache
-                # row).  prompt + out_tokens so a request re-queued by a
-                # hot-swap resumes its greedy decode exactly where it was
+                # prompt + out_tokens so a request re-queued by a hot-swap
+                # resumes its greedy decode exactly where it was
                 toks_list = list(req.prompt) + list(req.out_tokens)
+                if self._chunked_prefill_on() and toks_list:
+                    # interleaved prefill: only REGISTER the work here — the
+                    # prompt is consumed one prefill_chunk per engine step
+                    # (between decode batches) by _advance_prefill, directly
+                    # into this slot's cache row
+                    if self.caches is None:
+                        self.caches = self.executor.init_caches(
+                            self.slots, self.max_len
+                        )
+                    self._prefill_toks[slot] = toks_list
+                    self._prefill_done[slot] = 0
+                    self.slot_pos[slot] = 0
+                    continue
+                # blocking whole-prompt prefill (lockstep baseline, or
+                # prefill_chunk=None): batch-1 prefill into the slot's row
                 toks = jnp.asarray([toks_list], jnp.int32)
                 logits, slot_caches = self._prefill_slot(toks)
                 nxt = int(jnp.argmax(logits[0, -1]))
@@ -323,10 +432,88 @@ class ServingEngine:
                 # retire NOW or a decode step would overshoot the budget
                 self._maybe_retire(slot, nxt)
 
+    def _chunked_prefill_on(self) -> bool:
+        """Interleaved chunked prefill is a ragged-batching feature: the
+        lockstep baseline keeps the seed engine's blocking prefill (its
+        equal-depth cohort admission is defined around completed prefills)."""
+        return self.prefill_chunk is not None and self.batching == "ragged"
+
     def _prefill_slot(self, toks):
         caches = self.executor.init_caches(1, self.max_len)
-        logits, new_caches = self.executor.forward(toks, caches, cache_pos=0)
+        logits, new_caches = self.executor.forward(
+            toks, caches, cache_pos=0, kind="prefill"
+        )
         return logits, new_caches
+
+    def _slot_row_caches(self, slot: int):
+        """Batch-1 view of ``slot``'s cache rows (one row per stage layer) —
+        the chunk forward reads/writes the live row, not a fresh cache.
+
+        The gather here (and the scatter in ``_write_slot_cache``) copies
+        the full ``max_len`` row per layer per chunk — O(max_len/chunk)×
+        more cache traffic than the chunk writes.  Eliminating it means
+        packing the chunk INTO the batched ragged decode forward so the
+        cache row is written in place (the ROADMAP PR-5 follow-on)."""
+        return [
+            [
+                {key: layer[key][slot : slot + 1] for key in ("k", "v")}
+                for layer in st_caches
+            ]
+            for st_caches in self.caches
+        ]
+
+    def _advance_prefill(self) -> Optional[int]:
+        """Consume ONE ``prefill_chunk``-token chunk for the next mid-prefill
+        slot (round-robin), forwarded batch-1 into that slot's cache row at
+        its current depth.  At most one chunk per engine step, so active
+        slots never stall more than one chunk between decode steps.  Returns
+        the advanced slot index (None when nothing is mid-prefill)."""
+        if not self._prefill_toks:
+            return None
+        slot = None
+        for off in range(self.slots):
+            cand = (self._prefill_rr + off) % self.slots
+            if cand in self._prefill_toks:
+                slot = cand
+                break
+        self._prefill_rr = (slot + 1) % self.slots
+        toks_all = self._prefill_toks[slot]
+        done = self._prefill_done[slot]
+        n = min(self.prefill_chunk, len(toks_all) - done)
+        # fixed-shape chunks: pad the tail chunk to prefill_chunk tokens so
+        # EVERY chunk forward shares one compiled (1, chunk) program —
+        # whole-prompt prefill recompiles per distinct prompt length, which
+        # is its own head-of-line stall on an XLA backend.  Pad KV rows land
+        # beyond the prompt: causally masked until the decode steps
+        # overwrite them position by position, so they never leak into
+        # logits.  (Skipped in the rare case the pad would spill past the
+        # cache row — the write start would clamp and corrupt real entries.)
+        pad = self.prefill_chunk - n
+        if pad and done + self.prefill_chunk > self.max_len:
+            pad = 0
+        chunk_toks = toks_all[done : done + n] + [0] * pad
+        chunk = jnp.asarray([chunk_toks], jnp.int32)
+        row = self._slot_row_caches(slot)
+        logits, row = self.executor.forward(
+            chunk, row, cache_pos=int(done), kind="prefill"
+        )
+        self._write_slot_cache(slot, row)
+        done += n
+        self._prefill_done[slot] = done
+        # a garbage decode row writes (and is later overwritten) at this
+        # depth while the prefill is still in flight — see step()
+        self.slot_pos[slot] = done
+        if done == len(toks_all):
+            del self._prefill_toks[slot]
+            del self._prefill_done[slot]
+            req = self.active[slot]
+            # the next token comes from the LAST REAL prompt row (row n-1),
+            # not the padded tail
+            nxt = int(jnp.argmax(logits[0, n - 1]))
+            req.out_tokens.append(nxt)
+            # the prefill-produced token can itself finish the request
+            self._maybe_retire(slot, nxt)
+        return slot
 
     def _write_slot_cache(self, slot: int, slot_caches):
         if self.caches is None:
@@ -369,25 +556,46 @@ class ServingEngine:
         return False
 
     def step(self) -> int:
-        """One engine iteration: admit → batched decode → retire →
-        (possibly) close an observation window.  Returns the number of
-        active sequences decoded this step.
+        """One engine iteration: admit → advance at most one prefill chunk →
+        batched decode → retire → (possibly) close an observation window.
+        Returns the number of active sequences that made progress this step
+        (decoded a token, or advanced a prefill chunk).
 
         Ragged batching (default): the decode batch carries a ``(slots,)``
         ``cache_pos`` vector — every slot writes KV at its own depth and
         masks over its own valid length, so any mix of depths decodes
         together and admission is continuous (``_admit`` fills any free
-        slot immediately).  ``batching="lockstep"`` shares one position
-        (the max over active slots) and relies on ``_admit``'s equal-depth
-        cohort check — the seed-engine behavior kept as a baseline."""
+        slot immediately).  Slots whose prompt is still being consumed by
+        the chunked-prefill state machine sit the decode out (their row
+        decodes garbage that the next chunk overwrites); everyone else
+        decodes every step — a long prompt no longer stalls the batch.
+        ``batching="lockstep"`` shares one position (the max over active
+        slots) and relies on ``_admit``'s equal-depth cohort check — the
+        seed-engine behavior kept as a baseline."""
         self._admit()
-        idx = [i for i, r in enumerate(self.active) if r is not None]
+        adv_slot = self._advance_prefill() if self._prefill_toks else None
+        # decode-ready slots: active AND fully prefilled
+        idx = [
+            i for i, r in enumerate(self.active)
+            if r is not None and i not in self._prefill_toks
+        ]
+        # progress count: slots that decoded a token, plus the slot whose
+        # prefill advanced — counted once if its final chunk let it do both
+        progressed = set(idx)
+        if adv_slot is not None:
+            progressed.add(adv_slot)
         if not idx:
-            return 0
-        # batched single-token decode over ALL slots (inactive slots decode
-        # garbage into their own rows — masked at retirement)
+            return len(progressed)
+        # batched single-token decode over ALL slots (inactive and
+        # mid-prefill slots decode garbage into their own rows — inactive
+        # rows are masked at retirement, mid-prefill rows are overwritten
+        # by their next chunk)
         last = [
-            (self.active[i].out_tokens[-1] if self.active[i] else 0)
+            (
+                self.active[i].out_tokens[-1]
+                if self.active[i] and i not in self._prefill_toks
+                else 0
+            )
             for i in range(self.slots)
         ]
         toks = jnp.asarray(last, jnp.int32)[:, None]
@@ -395,7 +603,9 @@ class ServingEngine:
             pos = int(max(self.slot_pos[i] for i in idx))
         else:
             pos = np.asarray(self.slot_pos, np.int32)   # one depth per slot
-        logits, self.caches = self.executor.forward(toks, self.caches, cache_pos=pos)
+        logits, self.caches = self.executor.forward(
+            toks, self.caches, cache_pos=pos, kind="decode"
+        )
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
         for i in idx:
             req = self.active[i]
@@ -408,15 +618,17 @@ class ServingEngine:
             self._steps_since_window += 1
             if self._steps_since_window >= ws:
                 self.observe_window()
-        return len(idx)
+        return len(progressed)
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
         """Step until the queue and all slots are empty (or ``max_steps``).
 
         Returns the requests that reached a terminal state during THIS call
-        — served to completion, or turned away by ``admission="reject"``
-        (check ``Request.rejected``)."""
-        sink: List[Request] = []
+        — served to completion, or turned away by ``admission="reject"`` or
+        oversize validation (check ``Request.rejected``); oversize rejects
+        issued at submit time since the previous call are included too."""
+        sink: List[Request] = list(self._unclaimed_finished)
+        self._unclaimed_finished.clear()
         self._finish_sink = sink
         try:
             for _ in range(max_steps):
@@ -434,10 +646,19 @@ class ServingEngine:
         """Move in-flight requests back to the queue front before a
         hot-swap.  Their generated tokens are kept: on re-admission the
         prefill covers prompt + out_tokens, so greedy decoding resumes
-        exactly where it stopped (caches are rebuilt, work is not lost)."""
+        exactly where it stopped (caches are rebuilt, generated work is not
+        lost).  With chunked prefill on, the re-prefill runs through the
+        same interleaved state machine — chunk by chunk, never as one
+        monolithic prompt+generated pass — so a hot-swap cannot reintroduce
+        the head-of-line stall it is supposed to avoid.  Mid-prefill
+        progress itself cannot survive (the chunks written so far live in
+        the old topology's cache rows), so those requests restart their
+        prefill from token 0."""
         pending = [r for r in self.active if r is not None]
         self.active = [None] * self.slots
         self.slot_pos = np.zeros(self.slots, dtype=np.int64)
+        self._prefill_toks = {}
+        self._prefill_done = {}
         self.queue[:0] = pending
 
     def _replan_and_rebuild(self, reason: str):
@@ -503,22 +724,41 @@ class ServingEngine:
         pl = self.placement_result.placement
         return [pl[st.node_ids[0]] for st in self.executor.stages]
 
+    def _decode_batch(self) -> int:
+        """The decode batch the executor actually runs: EVERY step decodes
+        all ``slots`` rows in one batched forward (inactive rows decode
+        garbage), so observed stage times are whole-batch times at this
+        width — predictions must use the batch-aware cost model at the same
+        width or the per-class amortization skews the obs/pred ratios."""
+        return max(int(self.slots), 1)
+
     def _stage_class_weights(self, stage_idx: int) -> Dict[str, float]:
-        """Op class → predicted-time share of one stage (calibrator input)."""
+        """Op class → predicted-time share of one stage (calibrator input),
+        at the live decode batch — per-class amortization differs per stage,
+        so batch-1 weights would misattribute the evidence."""
         pl = self.placement_result.placement
+        batch = self._decode_batch()
         w: Dict[str, float] = {}
         for n in self.executor.stages[stage_idx].node_ids:
             node = self.graph.nodes[n]
             w[node.op_type] = w.get(node.op_type, 0.0) + self._cost.compute_time(
-                node, pl[n]
+                node, pl[n], batch=batch
             )
         return w
 
     def _drain_window(self) -> List[List[float]]:
-        """Stage times recorded since the last window (the executor's
+        """DECODE stage times recorded since the last window (the executor's
         recorders reset; samples are retained in the bounded reporting
-        history) — each observation window sees only fresh samples."""
-        fresh = self.executor.drain_stage_times()
+        histories) — each observation window sees only fresh samples.
+
+        Prefill samples are split off into their own history and NEVER fed
+        to the calibrator: a prefill forward's cost scales with prompt
+        length, so comparing it against per-token decode predictions would
+        read a burst of long prompts as device drift (spurious derates)."""
+        pre = self.executor.stage_times(kind="prefill")
+        fresh = self.executor.drain_stage_times(kind="decode")
+        for hist, t in zip(self._observed_prefill_history, pre):
+            hist.extend(t)
         for hist, t in zip(self._observed_history, fresh):
             hist.extend(t)
         return fresh
@@ -610,24 +850,63 @@ class ServingEngine:
     def _predict_stage_times(self) -> List[float]:
         """Simulator-predicted per-stage seconds for the current placement.
 
-        Sum of cost-model compute times of each stage's graph nodes on their
-        planned Moirai devices, plus the inter-stage activation transfer into
-        the stage.  Placement indices are ORIGINAL cluster indices (kept so
-        by on_device_failure), so the cost model — rebuilt from the derated
-        cluster after every adaptation — stays valid after any number of
-        failures, and predictions track the OBSERVED device speeds: after a
-        correct derate, a slowed device's obs/pred ratio returns to ~1."""
+        Whole-BATCH time of each stage at the live decode batch: the engine
+        decodes all ``slots`` rows in one batched kernel, so each node is
+        charged ``batch × compute_time(batch=batch)`` (the batch-aware
+        roofline's whole-batch cost) plus the batch's inter-stage activation
+        transfer into the stage.  Placement indices are ORIGINAL cluster
+        indices (kept so by on_device_failure), so the cost model — rebuilt
+        from the derated cluster after every adaptation — stays valid after
+        any number of failures, and predictions track the OBSERVED device
+        speeds: after a correct derate, a slowed device's obs/pred ratio
+        returns to ~1."""
         pl = self.placement_result.placement
+        batch = self._decode_batch()
         preds: List[float] = []
         prev_last: Optional[int] = None
         for st in self.executor.stages:
             t = sum(
-                self._cost.compute_time(self.graph.nodes[n], pl[n])
+                batch * self._cost.compute_time(
+                    self.graph.nodes[n], pl[n], batch=batch
+                )
                 for n in st.node_ids
             )
             if prev_last is not None and st.node_ids:
                 t += self._cost.comm_time(
-                    self.graph.nodes[prev_last].output_bytes,
+                    self.graph.nodes[prev_last].output_bytes * batch,
+                    pl[prev_last],
+                    pl[st.node_ids[0]],
+                )
+            if st.node_ids:
+                prev_last = st.node_ids[-1]
+            preds.append(t)
+        return preds
+
+    def _predict_prefill_stage_times(self, tokens: int) -> List[float]:
+        """Predicted per-stage seconds of ONE ``tokens``-token prefill chunk
+        (batch-1 — the chunk forward runs a single slot's row), from the
+        same cost model the decode predictions use: each stage node is
+        rescaled to the chunk's token count relative to the graph's build
+        seq_len (``core.simulate.scale_node_to_tokens``).  Feeds the
+        ``straggler_report``'s prefill section so prompt work is visible,
+        without ever entering the derate calibrator."""
+        from repro.core.simulate import prefill_compute_time
+
+        pl = self.placement_result.placement
+        s_graph = self.graph.seq_len or self.max_len
+        frac = float(tokens) / float(s_graph)
+        preds: List[float] = []
+        prev_last: Optional[int] = None
+        for st in self.executor.stages:
+            t = sum(
+                prefill_compute_time(
+                    self._cost, self.graph.nodes[n], pl[n], tokens, s_graph
+                )
+                for n in st.node_ids
+            )
+            if prev_last is not None and st.node_ids:
+                t += self._cost.comm_time(
+                    self.graph.nodes[prev_last].output_bytes * frac,
                     pl[prev_last],
                     pl[st.node_ids[0]],
                 )
@@ -655,16 +934,25 @@ class ServingEngine:
                 recorded latencies — used by tests and by external monitors.
 
         Returns:
-            A dict with ``stages`` (per-stage stats incl. ``predicted_s``
-            and ``obs_over_pred``), ``median_p95``, ``median_ratio``, and
-            the flagged ``stragglers`` stage indices.
+            A dict with ``stages`` (per-stage DECODE stats incl.
+            ``predicted_s`` and ``obs_over_pred``), ``median_p95``,
+            ``median_ratio``, the flagged ``stragglers`` stage indices, and
+            a ``prefill`` section (per-stage prefill-forward stats with
+            per-chunk predictions when chunking is on) — prompt work is
+            visible in the report but never mixed into the decode ratios
+            that drive the derate loop.
         """
         if observed is None:
-            # whole-run view: drained window history + not-yet-drained
-            # executor samples (observation windows reset the recorders)
+            # whole-run DECODE view: drained window history + not-yet-drained
+            # executor samples (observation windows reset the recorders).
+            # Prefill forwards are reported separately below — their cost
+            # scales with prompt length and must not skew decode ratios.
             observed = [
                 list(h) + t
-                for h, t in zip(self._observed_history, self.executor.stage_times())
+                for h, t in zip(
+                    self._observed_history,
+                    self.executor.stage_times(kind="decode"),
+                )
             ]
         stats = [stats_from_times(times) for times in observed]
         preds = self._pred_stage_s
@@ -691,6 +979,24 @@ class ServingEngine:
             baseline = float(np.median(others)) if others else s["obs_over_pred"]
             if baseline > 0 and s["obs_over_pred"] > self.straggler_factor * baseline:
                 stragglers.append(i)
+        # prefill visibility: per-stage stats of the tagged prefill forwards
+        # (whole-run: history + undrained), with per-chunk predictions when
+        # chunking is on.  Report-only — the derate loop never sees these.
+        pre_obs = [
+            list(h) + t
+            for h, t in zip(
+                self._observed_prefill_history,
+                self.executor.stage_times(kind="prefill"),
+            )
+        ]
+        pre_stats = [stats_from_times(times) for times in pre_obs]
+        pre_preds = self._pred_prefill_stage_s
+        for i, s in enumerate(pre_stats):
+            pred = pre_preds[i] if i < len(pre_preds) else 0.0
+            s["predicted_s"] = pred
+            s["obs_over_pred"] = (
+                s["p95"] / pred if s["n"] > 0 and pred > 0 else float("nan")
+            )
         return {
             "stages": stats,
             "median_p95": float(np.median(p95s)) if p95s else float("nan"),
@@ -698,4 +1004,11 @@ class ServingEngine:
                 float(np.median(list(finite.values()))) if finite else float("nan")
             ),
             "stragglers": stragglers,
+            "prefill": {
+                # None = blocking whole-prompt prefill (no per-chunk preds)
+                "chunk": (
+                    self.prefill_chunk if self._chunked_prefill_on() else None
+                ),
+                "stages": pre_stats,
+            },
         }

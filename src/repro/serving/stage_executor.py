@@ -91,7 +91,12 @@ class StageExecutor:
         self._windows = transformer._layer_windows(cfg)
         self._place_params(params)
         # bounded: a long-lived executor must not retain every forward's
-        # timing forever (the adaptation loop drains these per window anyway)
+        # timing forever (the adaptation loop drains these per window anyway).
+        # Entries are (kind, seconds) — "decode" or "prefill" — so the
+        # observation windows can feed the derate calibrator DECODE samples
+        # only: prefill forwards scale with prompt length, and comparing
+        # them against per-token decode predictions reads as device drift
+        # (spurious derates under prompt-heavy load).
         self._stage_times: List[deque] = [
             deque(maxlen=4096) for _ in stages
         ]
@@ -176,8 +181,15 @@ class StageExecutor:
         caches=None,
         cache_pos=None,               # int scalar, or (B,) int vector (ragged
                                       # decode: one cache depth per slot row)
+        *,
+        kind: Optional[str] = None,   # "decode" | "prefill" sample tag;
+                                      # None infers from the token count
     ):
         b, s = tokens.shape
+        if kind is None:
+            kind = "prefill" if s > 1 else "decode"
+        elif kind not in ("decode", "prefill"):
+            raise ValueError(f"kind must be 'decode' or 'prefill', got {kind!r}")
         cp = jnp.asarray(0 if cache_pos is None else cache_pos, jnp.int32)
         # per-row positions: row b decodes at depth cp[b] (scalar cp → all
         # rows share one depth, the classic lockstep batch)
@@ -196,31 +208,40 @@ class StageExecutor:
             st_caches = caches[si] if caches is not None else None
             x, nc = fn(self.stage_params[si], x, positions, st_caches, cp)
             x.block_until_ready()
-            self._stage_times[si].append(time.perf_counter() - t0)
+            self._stage_times[si].append((kind, time.perf_counter() - t0))
             new_caches.append(nc)
         return x, new_caches
 
     # stage latency stats (straggler detection feed)
-    def stage_latency_stats(self) -> List[Dict[str, float]]:
+    def _times(self, rec, kind: Optional[str]) -> List[float]:
+        return [t for k, t in rec if kind is None or k == kind]
+
+    def stage_latency_stats(self, kind: Optional[str] = None) -> List[Dict[str, float]]:
         """mean/p95/n summary per stage over the RETAINED forward calls —
         the recorder is a bounded ring (most recent 4096 per stage) that
         observation windows also drain; the engine's ``straggler_report``
-        keeps its own whole-run history."""
-        return [stats_from_times(times) for times in self._stage_times]
+        keeps its own whole-run history.  ``kind`` filters to "decode" or
+        "prefill" samples (None = all)."""
+        return [
+            stats_from_times(self._times(rec, kind)) for rec in self._stage_times
+        ]
 
-    def stage_times(self) -> List[List[float]]:
+    def stage_times(self, kind: Optional[str] = None) -> List[List[float]]:
         """Per-stage wall-clock seconds of recent forward calls (bounded
         ring, most recent last; copies — mutating the return value cannot
-        corrupt the recorder)."""
-        return [list(t) for t in self._stage_times]
+        corrupt the recorder).  ``kind`` filters to "decode" or "prefill"
+        samples (None = all)."""
+        return [self._times(rec, kind) for rec in self._stage_times]
 
-    def drain_stage_times(self) -> List[List[float]]:
+    def drain_stage_times(self, kind: Optional[str] = None) -> List[List[float]]:
         """Return the recorded per-stage times and RESET the recorders —
         each call yields only the samples since the previous drain (the
-        engine's observation windows)."""
-        out = [list(t) for t in self._stage_times]
-        for t in self._stage_times:
-            t.clear()
+        engine's observation windows).  ``kind`` selects which samples are
+        RETURNED (None = all); the reset always clears everything, so one
+        window's prefill samples can never leak into a later window."""
+        out = [self._times(rec, kind) for rec in self._stage_times]
+        for rec in self._stage_times:
+            rec.clear()
         return out
 
 
