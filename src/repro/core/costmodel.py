@@ -166,6 +166,40 @@ class CostModel:
         )
         return t * float(self.device_scale[device_idx])
 
+    def marginal_compute_time(self, node: OpNode, device_idx: int) -> float:
+        """Marginal seconds of adding ``node``'s work to a kernel launch
+        that is ALREADY running on this device — the fused mixed-batch cost
+        of a prefill-chunk row riding the batched decode forward.
+
+        Two terms of the full roofline vanish at the margin: the
+        batch-invariant weight traffic (the decode pass sharing the launch
+        streams the weights regardless) and the dispatch overhead (one
+        launch per step, already charged to decode).  What remains is the
+        row's own flops against the compute roof and its activation bytes
+        against HBM."""
+        dev = self.cluster.devices[device_idx]
+        serial = node.meta.get("serial") if node.meta else None
+        if serial:
+            t = 0.0
+            for flops, nbytes, op_type in serial:
+                act = max(nbytes * (1.0 - self._batch_invariant_frac(op_type)), 0.0)
+                t_f = flops / (dev.peak_flops * self._eff(op_type)) if flops else 0.0
+                t += max(t_f, act / dev.hbm_bw)
+            return t * float(self.device_scale[device_idx])
+        nbytes = node.bytes_accessed
+        if node.param_bytes is not None and node.param_bytes > 0:
+            inv = min(float(node.param_bytes), nbytes)
+        else:
+            inv = nbytes * self._batch_invariant_frac(node.op_type)
+        act = max(nbytes - inv, 0.0)
+        t_f = (
+            node.flops / (dev.peak_flops * self._eff(node.op_type))
+            if node.flops
+            else 0.0
+        )
+        t_b = act / dev.hbm_bw if act else 0.0
+        return max(t_f, t_b) * float(self.device_scale[device_idx])
+
     def compute_matrix(self, graph: OpGraph) -> Dict[int, np.ndarray]:
         """p_ik for all ops: node id -> [K] array of seconds."""
         return {

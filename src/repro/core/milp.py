@@ -125,6 +125,7 @@ def solve_placement(
     prompt_len: float = 0.0,
     prefill_chunk: Optional[int] = None,
     graph_seq_len: Optional[int] = None,
+    fused_prefill: bool = False,
     horizon: Optional[float] = None,
     tighten_horizon: bool = True,
     verbose: bool = False,
@@ -146,7 +147,11 @@ def solve_placement(
     engine actually runs (prefill + decode), not decode alone.  The Eq.
     4/6/7/8 feasibility families stay on the single decode pass (prefill
     passes reuse the same placement; they add busy time, not new
-    scheduling variables).
+    scheduling variables).  ``fused_prefill`` accumulates that prefill work
+    at the fused mixed-batch marginal rate (the engine packs chunks into
+    the live decode batch — no second weight stream or launch; see
+    ``simulate.fused_prefill_compute_time``); comm accumulators are
+    unchanged.
 
     ``upper_bound`` (seconds): a known-feasible value of the *configured
     objective* (e.g. from a heuristic schedule, which satisfies every MILP
@@ -195,11 +200,13 @@ def solve_placement(
     pcomm_pre = {q: np.zeros((K, K)) for q in comms}
     if objective == "throughput" and prompt_len and prompt_len > 0:
         from .simulate import (
+            fused_prefill_compute_time,
             prefill_chunk_sizes,
             prefill_compute_time,
             resolve_graph_seq_len,
         )
 
+        pct = fused_prefill_compute_time if fused_prefill else prefill_compute_time
         s_graph = resolve_graph_seq_len(graph, graph_seq_len)
         # chunk sizes repeat (all but the last are equal) — cost each
         # distinct size once and multiply, like simulate.prefill_busy
@@ -209,7 +216,7 @@ def solve_placement(
         for toks, n in counts.items():
             for o in ops:
                 p_pre[o] = p_pre[o] + n * np.array([
-                    prefill_compute_time(cost, graph.nodes[o], k, toks, s_graph)
+                    pct(cost, graph.nodes[o], k, toks, s_graph)
                     for k in range(K)
                 ])
             frac = float(toks) / float(s_graph)

@@ -92,6 +92,13 @@ class PlanConfig:
         Tokens per prefill chunk for that scoring AND the serving engine's
         interleaved prefill state machine (the engine reads it off its
         ``plan_cfg``); ``None`` means whole-prompt (blocking) prefill.
+    fused_prefill:
+        ``True`` (default) scores prefill chunks at the fused mixed-batch
+        marginal rate — the serving engine packs prompt chunks into the
+        live decode batch, so a chunk pays no second weight stream or
+        kernel launch — and tells the engine to serve that way.  ``False``
+        restores standalone per-chunk costing and the legacy interleaved
+        engine path.
     coarsen:
         Apply GCOF fusion coarsening before solving (paper Fig. 10 c/d vs
         a/b).
@@ -134,6 +141,12 @@ class PlanConfig:
     # prefill chunk size for that scoring and for the engine's interleaved
     # prefill state machine; None = whole-prompt (blocking) prefill
     prefill_chunk: Optional[int] = 64
+    # score prefill chunks at the fused mixed-batch marginal rate (the
+    # engine's default: chunks packed into the live decode batch share its
+    # weight stream and kernel launch).  The engine also reads this to pick
+    # its serving path — fused one-program steps (True) vs the legacy
+    # interleaved per-slot prefill forwards (False)
+    fused_prefill: bool = True
     coarsen: bool = True             # GCOF (Fig. 10 c/d vs a/b)
     rules: Optional[Sequence[Sequence[str]]] = None
     time_limit: float = 120.0
@@ -200,6 +213,7 @@ def plan(
             g_, pl, cost,
             prompt_len=prompt, prefill_chunk=cfg.prefill_chunk,
             graph_seq_len=graph_seq_len,
+            fused_prefill=bool(getattr(cfg, "fused_prefill", True)),
         )
 
     def _score(g_, pl) -> float:
@@ -291,6 +305,7 @@ def plan(
             prompt_len=prompt,
             prefill_chunk=cfg.prefill_chunk,
             graph_seq_len=graph_seq_len,
+            fused_prefill=bool(getattr(cfg, "fused_prefill", True)),
         )
         if member_to_super is not None and res.placement:
             coarse_placement = lift_placement(member_to_super, res.placement)

@@ -192,6 +192,19 @@ def prefill_compute_time(
     )
 
 
+def fused_prefill_compute_time(
+    cost: CostModel, node: OpNode, device_idx: int, tokens: int, seq_len: int
+) -> float:
+    """p_ik of a ``tokens``-token prefill chunk when the chunk rides INSIDE
+    the decode batch's fused forward (the engine's one-program-per-step
+    path): the weight stream and kernel launch are already charged to the
+    decode pass sharing the program, so only the chunk's marginal activation
+    work is billed (see ``CostModel.marginal_compute_time``)."""
+    return cost.marginal_compute_time(
+        scale_node_to_tokens(node, tokens, seq_len), device_idx
+    )
+
+
 def _resolve_prompt_lens(
     n_requests: int, prompt_len: Union[None, int, Sequence[int]]
 ) -> List[int]:
@@ -219,15 +232,20 @@ def _prefill_task_table(
     aug: AugmentedDAG,
     tokens: int,
     seq_len: int,
+    fused_prefill: bool = False,
 ) -> Tuple[Dict[int, float], Dict[int, Tuple]]:
     """(dur, resource) of one ``tokens``-token prefill pass of the placed
     graph — same task ids, deps and resources as the decode pass
-    (``_task_table``), durations rescaled to the chunk's token count."""
+    (``_task_table``), durations rescaled to the chunk's token count.
+    ``fused_prefill`` bills devices at the marginal (fused mixed-batch)
+    rate; comm payloads are unchanged — activations cross stage boundaries
+    whether or not the chunk shares a program with decode rows."""
+    pct = fused_prefill_compute_time if fused_prefill else prefill_compute_time
     dur: Dict[int, float] = {}
     resource: Dict[int, Tuple] = {}
     for nid, node in graph.nodes.items():
         k = placement[nid]
-        dur[nid] = prefill_compute_time(cost, node, k, tokens, seq_len)
+        dur[nid] = pct(cost, node, k, tokens, seq_len)
         resource[nid] = ("dev", k)
     frac = float(tokens) / float(seq_len)
     for q, c in aug.comm.items():
@@ -250,11 +268,15 @@ def prefill_busy(
     prefill_chunk: Optional[int] = None,
     seq_len: Optional[int] = None,
     aug: Optional[AugmentedDAG] = None,
+    fused_prefill: bool = False,
 ) -> Dict[Tuple, float]:
     """Per-request prefill busy seconds by resource (device / directed
     channel) — the chunked prompt work one request adds on top of its decode
     pass.  Added to the decode busy by :func:`bottleneck_time` and mirrored
-    by the throughput MILP's busy-time accumulators."""
+    by the throughput MILP's busy-time accumulators.  ``fused_prefill``
+    scores chunks at the fused mixed-batch marginal rate (no second weight
+    stream, no second launch — the engine's default serving path); comm
+    busy is unchanged."""
     chunks = prefill_chunk_sizes(prompt_len, prefill_chunk)
     busy: Dict[Tuple, float] = {}
     if not chunks:
@@ -266,13 +288,12 @@ def prefill_busy(
     counts: Dict[int, int] = {}
     for t in chunks:
         counts[t] = counts.get(t, 0) + 1
+    pct = fused_prefill_compute_time if fused_prefill else prefill_compute_time
     for t, n in counts.items():
         for nid, node in graph.nodes.items():
             k = placement[nid]
             key = ("dev", k)
-            busy[key] = busy.get(key, 0.0) + n * prefill_compute_time(
-                cost, node, k, t, s
-            )
+            busy[key] = busy.get(key, 0.0) + n * pct(cost, node, k, t, s)
         frac = float(t) / float(s)
         for q, c in aug.comm.items():
             ks, kd = placement[c.src], placement[c.dst]
@@ -571,6 +592,7 @@ def simulate_pipeline(
     prefill_chunk: Optional[int] = None,
     graph_seq_len: Optional[int] = None,
     aug: Optional[AugmentedDAG] = None,
+    fused_prefill: bool = False,
 ) -> PipelineResult:
     """Simulate ``n_requests`` copies of the placed graph sharing one cluster.
 
@@ -607,7 +629,14 @@ def simulate_pipeline(
     contending for the SAME devices and channels as every other request's
     work — prompt-heavy workloads are no longer scored as if prompts were
     free.  ``prompt_len=None``/``0`` reproduces the decode-only request
-    model exactly."""
+    model exactly.
+
+    ``fused_prefill`` scores each prefill chunk at the fused mixed-batch
+    marginal rate — the engine packs chunks into the live decode batch, so a
+    chunk pays no second weight stream and no second kernel launch (see
+    :func:`fused_prefill_compute_time`).  The round structure is unchanged:
+    chunks still execute strictly in order before their request's decode
+    pass, so :func:`validate_pipeline_schedule` applies as-is."""
     if n_requests < 1:
         raise ValueError("n_requests must be >= 1")
     if batching not in ("ragged", "lockstep"):
@@ -637,7 +666,8 @@ def simulate_pipeline(
         s_graph = resolve_graph_seq_len(graph, graph_seq_len)
         for toks in {t for ch in chunks_of for t in ch}:
             pre_tables[toks] = _prefill_task_table(
-                graph, placement, cost, aug, toks, s_graph
+                graph, placement, cost, aug, toks, s_graph,
+                fused_prefill=fused_prefill,
             )
     n_rounds = [len(ch) + 1 for ch in chunks_of]   # prefill rounds + decode
 
@@ -881,6 +911,7 @@ def bottleneck_time(
     prefill_chunk: Optional[int] = None,
     graph_seq_len: Optional[int] = None,
     aug: Optional[AugmentedDAG] = None,
+    fused_prefill: bool = False,
 ) -> float:
     """Per-request busy time of the most loaded resource (device or channel).
 
@@ -893,7 +924,9 @@ def bottleneck_time(
     ``CostModel.compute_time``).  ``prompt_len > 0`` adds each request's
     chunked-prefill work (``prefill_chunk`` tokens per pass, whole-prompt
     when None) to the same per-resource busy sums — prompt-heavy workloads
-    stop scoring as if prompts were free (see :func:`prefill_busy`)."""
+    stop scoring as if prompts were free (see :func:`prefill_busy`).
+    ``fused_prefill`` charges those chunks the fused mixed-batch marginal
+    rate, matching the engine's one-program-per-step serving path."""
     aug = aug or augment(graph)
     busy: Dict[Tuple, float] = {}
     for nid, node in graph.nodes.items():
@@ -911,7 +944,7 @@ def bottleneck_time(
         for key, t in prefill_busy(
             graph, placement, cost,
             prompt_len=prompt_len, prefill_chunk=prefill_chunk,
-            seq_len=graph_seq_len, aug=aug,
+            seq_len=graph_seq_len, aug=aug, fused_prefill=fused_prefill,
         ).items():
             busy[key] = busy.get(key, 0.0) + t
     return max(busy.values()) if busy else 0.0

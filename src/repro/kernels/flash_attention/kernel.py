@@ -11,11 +11,16 @@ VMEM scratch across the KV sweep — the classic flash recurrence:
 Features: causal masking, sliding window (gemma2 local layers), score
 soft-capping, GQA handled by the ops.py wrapper (KV streamed per group,
 never repeated in memory).  Query/key positions are affine in the block
-indices (pos = block_idx·B + iota + offset); the offset is a **per-row
-scalar-prefetch operand** (``q_offsets[bh]``), so ragged decode batches —
-every serving slot at its own cache depth — run in one kernel launch with
-per-row causal masks.  BQ=BK=128 blocks align with the 128×128 MXU; ops.py
-pads head_dim to a lane multiple.
+indices (pos = block_idx·B + iota + offset); each row's ragged shape rides
+in as **per-row scalar-prefetch operands** ``(q_offsets[bh], q_lens[bh])``:
+``q_offsets`` is the absolute position of query row 0 (the row's cache
+depth), ``q_lens`` the number of VALID query rows.  Mixed fused batches —
+decode rows at ``q_len=1``, prefill chunks at ``q_len=chunk``, idle rows at
+``q_len=0``, every serving slot at its own cache depth — run in ONE kernel
+launch with per-row causal masks; queries beyond a row's ``q_len`` are
+fully masked and produce exact zeros (the fused-batch padding contract).
+BQ=BK=128 blocks align with the 128×128 MXU; ops.py pads head_dim to a
+lane multiple.
 """
 
 from __future__ import annotations
@@ -36,6 +41,8 @@ NEG_INF = -1e30
 def _flash_kernel(
     offs_ref,   # scalar-prefetch [BH] — absolute position of query row 0,
                 # per batch·head row (ragged decode: one depth per slot)
+    lens_ref,   # scalar-prefetch [BH] — valid query rows per batch·head row
+                # (fused mixed batch: 1 = decode, chunk = prefill, 0 = idle)
     q_ref,      # [BQ, D]
     k_ref,      # [BK, D]
     v_ref,      # [BK, D]
@@ -57,6 +64,7 @@ def _flash_kernel(
     qi = pl.program_id(1)
     kj = pl.program_id(2)
     q_offset = offs_ref[bh]
+    q_len = lens_ref[bh]
 
     @pl.when(kj == 0)
     def _init():
@@ -72,13 +80,16 @@ def _flash_kernel(
     if softcap > 0.0:
         s = softcap * jnp.tanh(s / softcap)
 
-    qp = (
-        qi * block_q
-        + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
-        + q_offset
-    )
+    qrow = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0
+    )                                        # local query row index
+    qp = qrow + q_offset
     kp = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
     mask = kp < k_len                        # sequence padding is never visible
+    # per-row ragged length: query rows beyond this row's q_len are fully
+    # masked — their denominator stays 0 and _finalize emits exact zeros,
+    # the deterministic padding output of a fused mixed batch
+    mask &= qrow < q_len
     if causal:
         mask &= kp <= qp
     if window > 0:
@@ -118,6 +129,8 @@ def flash_attention_pallas(
     q_offset: int = 0,
     q_offsets: Optional[jax.Array] = None,   # [BH] per-row query offsets
                                              # (overrides scalar q_offset)
+    q_lens: Optional[jax.Array] = None,      # [BH] valid query rows per row
+                                             # (None → all sq rows valid)
     k_len: int = 0,          # 0 → all keys valid
     block_q: int = DEFAULT_BQ,
     block_k: int = DEFAULT_BK,
@@ -133,6 +146,11 @@ def flash_attention_pallas(
     else:
         assert q_offsets.shape == (bh,), (q_offsets.shape, bh)
         q_offsets = q_offsets.astype(jnp.int32)
+    if q_lens is None:
+        q_lens = jnp.full((bh,), sq, jnp.int32)
+    else:
+        assert q_lens.shape == (bh,), (q_lens.shape, bh)
+        q_lens = q_lens.astype(jnp.int32)
 
     kernel = functools.partial(
         _flash_kernel,
@@ -145,10 +163,10 @@ def flash_attention_pallas(
         block_q=block_q,
         block_k=block_k,
     )
-    # per-row offsets ride in as a scalar-prefetch operand (SMEM): available
-    # before the body runs, so masks stay affine in the block indices
+    # per-row (offset, len) ride in as scalar-prefetch operands (SMEM):
+    # available before the body runs, so masks stay affine in block indices
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(bh, n_q, n_k),
         in_specs=[
             pl.BlockSpec((None, block_q, d), lambda b, i, j, *_: (b, i, 0)),
@@ -167,4 +185,4 @@ def flash_attention_pallas(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
         interpret=interpret,
-    )(q_offsets, q, k, v)
+    )(q_offsets, q_lens, q, k, v)

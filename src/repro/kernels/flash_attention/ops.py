@@ -11,6 +11,11 @@ operand ([B] or [B, Sq]) makes every batch row mask against its own cache
 depth (the per-slot ``cache_pos`` vector of the serving engine), streamed
 into the kernel as a scalar-prefetch operand.  A 1-D ``q_pos`` ([Sq]) or
 the static ``q_offset`` keep the classic shared-offset behavior.
+
+Fused mixed prefill/decode batches additionally carry ``q_lens`` ([B]): the
+number of VALID query rows per batch row (decode rows 1, prefill chunks
+``chunk``, idle rows 0).  Queries beyond a row's ``q_lens`` are fully
+masked inside the kernel and output exact zeros.
 """
 
 from __future__ import annotations
@@ -42,6 +47,8 @@ def flash_attention(
     k_pos: Optional[jax.Array] = None,   # [Sk] — must be arange(Sk) (affine);
                                          # kept for signature parity with the
                                          # naive/chunked impls
+    q_lens: Optional[jax.Array] = None,  # [B] valid query rows per batch row
+                                         # (fused mixed batch; None → all Sq)
     *,
     scale: float,
     causal: bool = True,
@@ -65,6 +72,9 @@ def flash_attention(
     else:                                    # [Sq] shared across rows
         offs = jnp.full((b,), q_pos[0].astype(jnp.int32))
     offs_bh = jnp.repeat(offs, kv * rep)     # row-major (b, kv, rep) fold below
+    lens_bh = (
+        None if q_lens is None else jnp.repeat(q_lens.astype(jnp.int32), kv * rep)
+    )
 
     # fold GQA groups into the kernel's batch axis: [B·KV·rep, S, D]
     qk = q.reshape(b, sq, kv, rep, d).transpose(0, 2, 3, 1, 4).reshape(b * kv * rep, sq, d)
@@ -98,6 +108,7 @@ def flash_attention(
         window=int(window or 0),
         softcap=float(softcap or 0.0),
         q_offsets=offs_bh,
+        q_lens=lens_bh,
         k_len=sk,
         block_q=bq,
         block_k=bk,

@@ -56,6 +56,13 @@ def main(argv=None):
         "chunk size the planner's prefill-aware throughput scoring assumes",
     )
     ap.add_argument(
+        "--no-fused-prefill", dest="fused_prefill", action="store_false",
+        help="serve prefill chunks as standalone batch-1 forwards between "
+        "decode steps (the legacy interleaved path) instead of packing them "
+        "into the decode batch's single fused forward per step; the planner "
+        "scores prefill at the matching rate",
+    )
+    ap.add_argument(
         "--prompt-len", type=int, default=0, metavar="TOKENS",
         help="expected prompt tokens per request: lets the throughput "
         "planner charge each request's chunked-prefill work when scoring "
@@ -92,6 +99,7 @@ def main(argv=None):
             objective="throughput" if args.slots > 1 else "latency",
             prefill_chunk=args.prefill_chunk or None,
             prompt_len=args.prompt_len,
+            fused_prefill=args.fused_prefill,
         ),
         eos_id=-1,
         # short windows can't carry the default 4-sample evidence minimum —
@@ -113,6 +121,7 @@ def main(argv=None):
         f"adapt_every={args.adapt_every or 'off'} "
         "prefill_chunk="
         f"{engine.prefill_chunk if engine._chunked_prefill_on() else 'blocking'}"
+        f" step={'fused' if engine._fused_on() else 'interleaved'}"
     )
     t0 = time.perf_counter()
     reqs = [

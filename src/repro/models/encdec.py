@@ -121,16 +121,21 @@ def _cross_kv(layer_p, memory, cfg) -> Tuple[jax.Array, jax.Array]:
     return k, v
 
 
-def _dec_block(layer_p, x, cfg, positions, memory_kv, self_cache, cache_pos):
+def _dec_block(layer_p, x, cfg, positions, memory_kv, self_cache, cache_pos,
+               q_lens=None):
     h = rmsnorm(x, layer_p["ln_self"])
     out, new_cache = multihead_attention(
         layer_p["self_attn"], h, cfg,
         positions=positions, kv_cache=self_cache, cache_pos=cache_pos,
+        q_lens=q_lens,
     )
     x = x + out
     h = rmsnorm(x, layer_p["ln_cross"])
+    # cross-attn sees the full encoder memory regardless of row length;
+    # q_lens only zeroes the padding query rows for determinism
     out, _ = multihead_attention(
-        layer_p["cross_attn"], h, cfg, positions=positions, cross_kv=memory_kv
+        layer_p["cross_attn"], h, cfg, positions=positions, cross_kv=memory_kv,
+        q_lens=q_lens,
     )
     x = x + out
     h = rmsnorm(x, layer_p["ln_mlp"])
@@ -138,7 +143,7 @@ def _dec_block(layer_p, x, cfg, positions, memory_kv, self_cache, cache_pos):
 
 
 def decode_stack(params, tokens, cfg, memory=None, cross_cache=None,
-                 self_cache=None, cache_pos=None):
+                 self_cache=None, cache_pos=None, q_lens=None):
     x = jnp.take(params["embed"], tokens, axis=0)
     x = shard_hint(x, "batch", None, "embed")
     b, s = tokens.shape
@@ -158,7 +163,8 @@ def decode_stack(params, tokens, cfg, memory=None, cross_cache=None,
             else:
                 layer_p, sc = xs[0], xs[1]
                 kv = _cross_kv(layer_p, memory, cfg)
-            x, nc = _dec_block(layer_p, x, cfg, positions, kv, sc, cache_pos)
+            x, nc = _dec_block(layer_p, x, cfg, positions, kv, sc, cache_pos,
+                               q_lens)
             return x, nc
 
         body_fn = jax.checkpoint(body) if cfg.remat else body
@@ -180,7 +186,7 @@ def decode_stack(params, tokens, cfg, memory=None, cross_cache=None,
                 if self_cache is not None
                 else None
             )
-            x, nc = dec_fn(layer_p, x, cfg, positions, kv, sc, cache_pos)
+            x, nc = dec_fn(layer_p, x, cfg, positions, kv, sc, cache_pos, q_lens)
             if nc is not None:
                 new_k.append(nc["k"])
                 new_v.append(nc["v"])
@@ -278,3 +284,16 @@ def decode_step(params, token_batch, caches, cache_pos, cfg: ModelConfig):
         cache_pos=cache_pos,
     )
     return logits[:, -1], {"self": new_self, "cross": caches["cross"]}
+
+
+def fused_step(params, token_batch, caches, cache_pos, q_lens, cfg: ModelConfig):
+    """One FUSED mixed prefill/decode decoder step (see
+    :func:`repro.models.transformer.fused_step`): tokens [B, S], per-row
+    ``(cache_pos, q_lens)``; returns the FULL logits [B, S, V] and new caches."""
+    logits, new_self = decode_stack(
+        params, token_batch["tokens"], cfg,
+        cross_cache=caches["cross"], self_cache=caches["self"],
+        cache_pos=jnp.asarray(cache_pos, jnp.int32),
+        q_lens=jnp.asarray(q_lens, jnp.int32),
+    )
+    return logits, {"self": new_self, "cross": caches["cross"]}

@@ -235,6 +235,9 @@ def multihead_attention(
     layer_window: Optional[int] = None,
     cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,  # enc-dec cross attn
     causal: Optional[bool] = None,    # None → causal for self, full for cross
+    q_lens: Optional[jax.Array] = None,  # [B] valid query rows per batch row
+                                         # (fused mixed batch: decode rows 1,
+                                         # prefill chunks n, idle rows 0)
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     hd = cfg.resolved_head_dim
     b, sq, _ = x.shape
@@ -275,7 +278,23 @@ def multihead_attention(
     if kv_cache is not None and cross_kv is None:
         # decode / incremental prefill: write new kv at cache_pos
         kcache, vcache = kv_cache["k"], kv_cache["v"]
-        if ragged:
+        if ragged and q_lens is not None:
+            # fused mixed batch: row b writes k[b, :q_lens[b]] at its own
+            # depth and NOTHING else.  dynamic_update_slice cannot express
+            # this — it clamps start indices, so a short row near max_len
+            # would slide backwards and corrupt valid KV — so scatter via a
+            # masked gather-from-source instead: cache slot t of row b takes
+            # chunk token (t - cache_pos[b]) iff that lands in [0, q_lens[b]).
+            smax = kcache.shape[1]
+            src = jnp.arange(smax, dtype=jnp.int32)[None, :] - cache_pos[:, None]
+            valid = (src >= 0) & (src < q_lens[:, None])           # [B, Smax]
+            idx = jnp.clip(src, 0, sq - 1)[:, :, None, None]
+            kg = jnp.take_along_axis(k.astype(kcache.dtype), idx, axis=1)
+            vg = jnp.take_along_axis(v.astype(vcache.dtype), idx, axis=1)
+            w4 = valid[:, :, None, None]
+            kcache = jnp.where(w4, kg, kcache)
+            vcache = jnp.where(w4, vg, vcache)
+        elif ragged:
             # each row writes at its own depth (per-slot KV write index)
             upd = lambda c, new, pos: jax.lax.dynamic_update_slice_in_dim(
                 c, new, pos, axis=0
@@ -324,8 +343,8 @@ def multihead_attention(
         from repro.kernels.flash_attention import ops as fa_ops
 
         out = fa_ops.flash_attention(
-            q, k, v, q_pos, k_pos1d, causal=causal, window=static_window,
-            softcap=cfg.attn_softcap, scale=scale,
+            q, k, v, q_pos, k_pos1d, q_lens, causal=causal,
+            window=static_window, softcap=cfg.attn_softcap, scale=scale,
         )
     elif impl == "chunked" and k.shape[1] > cfg.attn_chunk and sq > 1:
         out = _chunked_attention(
@@ -340,6 +359,14 @@ def multihead_attention(
         ).astype(x.dtype).reshape(b, sq, cfg.n_heads, hd)
 
     out = out.reshape(b, sq, cfg.n_heads * hd)
+    if q_lens is not None:
+        # fused-batch padding contract: query rows beyond a row's q_len emit
+        # exact zeros from EVERY impl (the pallas kernel zeroes them via its
+        # all-masked denominator; naive/chunked would leak a uniform softmax)
+        out = jnp.where(
+            jnp.arange(sq, dtype=jnp.int32)[None, :, None] < q_lens[:, None, None],
+            out, jnp.zeros_like(out),
+        )
     out = out @ p["wo"]
     out = shard_hint(out, "batch", None, "embed")
     return out, new_cache

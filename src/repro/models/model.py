@@ -27,6 +27,11 @@ class Model:
     # serving engine interleaves with ragged decode steps
     prefill_chunked: Callable[..., Tuple[jax.Array, Any]]
     decode_step: Callable[..., Tuple[jax.Array, Any]]
+    # fused mixed prefill/decode step: tokens [B,S] with per-row
+    # (cache_pos, q_lens) — decode rows q_len=1, prefill chunks q_len=n,
+    # idle rows q_len=0.  Returns (full logits [B,S,V], new_caches); one
+    # compiled program serves the whole serving step
+    fused_step: Callable[..., Tuple[jax.Array, Any]]
     init_cache: Callable[..., Any]
 
 
@@ -41,6 +46,9 @@ def build_model(cfg: ModelConfig) -> Model:
                 p, b, cfg, max_len, chunk=chunk
             ),
             decode_step=lambda p, t, c, pos: encdec.decode_step(p, t, c, pos, cfg),
+            fused_step=lambda p, t, c, pos, qlens: encdec.fused_step(
+                p, t, c, pos, qlens, cfg
+            ),
             # cross cache length = encoder frame count (same seq grid here)
             init_cache=lambda b, s: {
                 "self": encdec.init_self_cache(cfg, b, s),
@@ -56,6 +64,9 @@ def build_model(cfg: ModelConfig) -> Model:
             p, b, cfg, max_len, chunk=chunk
         ),
         decode_step=lambda p, t, c, pos: transformer.decode_step(p, t, c, pos, cfg),
+        fused_step=lambda p, t, c, pos, qlens: transformer.fused_step(
+            p, t, c, pos, qlens, cfg
+        ),
         init_cache=lambda b, s: transformer.init_cache(cfg, b, s),
     )
 

@@ -165,6 +165,8 @@ def mamba2_block(
     cfg: ModelConfig,
     *,
     state: Optional[Dict[str, jax.Array]] = None,   # decode: {"conv","ssm"}
+    seq_lens: Optional[jax.Array] = None,  # [B] valid tokens per row (fused
+                                           # mixed batch; requires state)
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     dims = mamba2_dims(cfg)
     b, s, _ = xin.shape
@@ -176,6 +178,14 @@ def mamba2_block(
     Br = xin @ p["w_B"]
     Cr = xin @ p["w_C"]
     dt = jax.nn.softplus((xin @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+    if seq_lens is not None and state is not None:
+        # ragged rows: tokens beyond a row's seq_len are EXACT state no-ops
+        # in the SSD recurrence — dt=0 means decay exp(0·A)=1 and a zero
+        # dt-weighted input — so masking dt is sufficient to freeze the ssm
+        # state through padding (conv tails are gathered per-row below)
+        dt = dt * (
+            jnp.arange(s, dtype=jnp.int32)[None, :, None] < seq_lens[:, None, None]
+        )
 
     new_state = None
     if state is None:
@@ -206,7 +216,16 @@ def mamba2_block(
             out = jnp.zeros_like(v_new)
             for i in range(width):
                 out = out + full[:, i : i + s, :] * w[i]
-            tail = full[:, full.shape[1] - (width - 1):]
+            if seq_lens is None:
+                tail = full[:, full.shape[1] - (width - 1):]
+            else:
+                # per-row tail: the last W-1 inputs BEFORE padding.  In
+                # ``full`` (old tail ++ chunk) those sit at seq_len + m for
+                # m = 0..W-2 — uniformly correct whether they fall in the
+                # old-tail region (seq_len < W-1) or the chunk region, and
+                # an idle row (seq_len = 0) keeps its old tail verbatim.
+                idx = seq_lens[:, None] + jnp.arange(width - 1, dtype=jnp.int32)[None, :]
+                tail = jnp.take_along_axis(full, idx[:, :, None], axis=1)
             return jax.nn.silu(out + bias), tail
 
         xc, new_cx = conv_cont(xr, state["conv_x"], p["conv_x"], p["b_x"])
@@ -226,7 +245,11 @@ def mamba2_block(
         def conv_step(v_new, st, w, bias):
             full = jnp.concatenate([st, v_new], axis=1)            # [B, W, ch]
             out = (full * w[None]).sum(axis=1, keepdims=True) + bias
-            return jax.nn.silu(out), full[:, 1:]
+            tail = full[:, 1:]
+            if seq_lens is not None:
+                # idle rows (seq_len = 0) must not shift their conv tail
+                tail = jnp.where((seq_lens > 0)[:, None, None], tail, st)
+            return jax.nn.silu(out), tail
 
         xc, new_cx = conv_step(xr, state["conv_x"], p["conv_x"], p["b_x"])
         Bc, new_cB = conv_step(Br, state["conv_B"], p["conv_B"], p["b_B"])

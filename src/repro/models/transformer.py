@@ -97,6 +97,7 @@ def block_apply(
     window: jax.Array,                         # scalar int32 (traced)
     kv_cache: Optional[Dict[str, jax.Array]] = None,
     cache_pos: Optional[jax.Array] = None,
+    q_lens: Optional[jax.Array] = None,        # [B] fused-batch valid rows
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]], jax.Array]:
     """One transformer block; returns (x, new_cache, aux_loss)."""
     h = rmsnorm(x, p["ln_attn"])
@@ -106,6 +107,7 @@ def block_apply(
         kv_cache=kv_cache,
         cache_pos=cache_pos,
         layer_window=window,
+        q_lens=q_lens,
     )
     if cfg.post_block_norm:
         attn_out = rmsnorm(attn_out, p["ln_attn_post"])
@@ -237,7 +239,7 @@ def _logits_out(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     return shard_hint(logits, "batch", None, "vocab")
 
 
-def _dense_stack(params, x, cfg, positions, caches, cache_pos):
+def _dense_stack(params, x, cfg, positions, caches, cache_pos, q_lens=None):
     """Scan (or loop) over transformer layers; returns (x, new_caches, aux)."""
     windows = _layer_windows(cfg)
 
@@ -245,7 +247,7 @@ def _dense_stack(params, x, cfg, positions, caches, cache_pos):
         return block_apply(
             layer_p, x, cfg,
             positions=positions, window=window,
-            kv_cache=cache, cache_pos=cache_pos,
+            kv_cache=cache, cache_pos=cache_pos, q_lens=q_lens,
         )
 
     if cfg.scan_layers:
@@ -293,7 +295,7 @@ def _dense_stack(params, x, cfg, positions, caches, cache_pos):
     return x, new_caches, aux_total
 
 
-def _ssm_stack(params, x, cfg, caches, cache_pos=None):
+def _ssm_stack(params, x, cfg, caches, cache_pos=None, q_lens=None):
     # continuation (decode step OR a chunked-prefill chunk): the recurrent
     # state carries in — mamba2_block picks the single-token or the
     # chunk-continuation path from the sequence length.  cache_pos=None is
@@ -302,7 +304,10 @@ def _ssm_stack(params, x, cfg, caches, cache_pos=None):
 
     def one(x, layer_p, state):
         h = rmsnorm(x, layer_p["ln"])
-        out, new_state = mamba2_block(layer_p["mamba"], h, cfg, state=state if cont else None)
+        out, new_state = mamba2_block(
+            layer_p["mamba"], h, cfg, state=state if cont else None,
+            seq_lens=q_lens if cont else None,
+        )
         return x + out, new_state
 
     if cfg.scan_layers:
@@ -325,7 +330,7 @@ def _ssm_stack(params, x, cfg, caches, cache_pos=None):
     return x, {"layers": stacked}
 
 
-def _hybrid_stack(params, x, x_embed, cfg, positions, caches, cache_pos):
+def _hybrid_stack(params, x, x_embed, cfg, positions, caches, cache_pos, q_lens=None):
     """Zamba2: mamba trunk in segments; shared attn block every N layers."""
     every = cfg.shared_attn_every
     n_shared = cfg.n_layers // every
@@ -340,6 +345,7 @@ def _hybrid_stack(params, x, x_embed, cfg, positions, caches, cache_pos):
             out, new_state = mamba2_block(
                 layer_p["mamba"], rmsnorm(x, layer_p["ln"]), cfg,
                 state=state if cont else None,
+                seq_lens=q_lens if cont else None,
             )
             return x + out, new_state
 
@@ -379,7 +385,7 @@ def _hybrid_stack(params, x, x_embed, cfg, positions, caches, cache_pos):
         u, nc, _ = block_apply(
             params["shared_block"], u, cfg,
             positions=positions, window=big,
-            kv_cache=cache_i, cache_pos=attn_pos,
+            kv_cache=cache_i, cache_pos=attn_pos, q_lens=q_lens,
         )
         x = x + u
         if nc is not None:
@@ -404,6 +410,8 @@ def forward(
     *,
     caches: Optional[Params] = None,
     cache_pos: Optional[jax.Array] = None,
+    q_lens: Optional[jax.Array] = None,  # [B] valid tokens per row (fused
+                                         # mixed prefill/decode batch)
 ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     """Returns (logits [B,S,V], new_caches, aux_loss)."""
     x, positions = _embed_in(params, batch, cfg)
@@ -424,13 +432,17 @@ def forward(
     if cfg.family == "ssm":
         if caches is None:
             caches = init_cache(cfg, x.shape[0], 0)
-        x, new_caches = _ssm_stack(params, x, cfg, caches, cache_pos)
+        x, new_caches = _ssm_stack(params, x, cfg, caches, cache_pos, q_lens)
     elif cfg.family == "hybrid":
         if caches is None:
             caches = init_cache(cfg, x.shape[0], x.shape[1])
-        x, new_caches = _hybrid_stack(params, x, x, cfg, positions, caches, cache_pos)
+        x, new_caches = _hybrid_stack(
+            params, x, x, cfg, positions, caches, cache_pos, q_lens
+        )
     else:
-        x, new_caches, aux = _dense_stack(params, x, cfg, positions, caches, cache_pos)
+        x, new_caches, aux = _dense_stack(
+            params, x, cfg, positions, caches, cache_pos, q_lens
+        )
     logits = _logits_out(params, x, cfg)
     return logits, new_caches, aux
 
@@ -514,3 +526,19 @@ def decode_step(params, token_batch, caches, cache_pos, cfg: ModelConfig):
         params, token_batch, cfg, caches=caches, cache_pos=cache_pos
     )
     return logits[:, -1], new_caches
+
+
+def fused_step(params, token_batch, caches, cache_pos, q_lens, cfg: ModelConfig):
+    """One FUSED mixed prefill/decode step: tokens [B, S] where row b's first
+    ``q_lens[b]`` tokens are valid — decode rows carry 1, prefill chunks up to
+    S, idle rows 0.  ``cache_pos`` is a (B,) int32 vector of per-row depths.
+    Rows write KV / advance SSM state only over their valid span; everything
+    beyond is untouched.  Returns the FULL logits [B, S, V] (the caller reads
+    row b at index q_lens[b]-1) and the new caches — one compiled program
+    serves the whole serving step."""
+    logits, new_caches, _ = forward(
+        params, token_batch, cfg, caches=caches,
+        cache_pos=jnp.asarray(cache_pos, jnp.int32),
+        q_lens=jnp.asarray(q_lens, jnp.int32),
+    )
+    return logits, new_caches

@@ -54,7 +54,22 @@
   prompt+generated through the same chunked state machine.  Prefill
   forwards are tagged so observation windows feed the derate calibrator
   decode samples only — a burst of long prompts must not read as device
-  drift.
+  drift,
+* **fused mixed prefill/decode steps** (default when chunking is on): the
+  pending prefill chunks are packed INTO the batched ragged decode forward
+  as rows of the same ``[slots, S]`` batch — per-row ``(cache_pos, q_len)``
+  gives decode rows ``q_len=1``, prefill rows ``q_len=chunk``, idle rows
+  ``q_len=0``; every row writes KV / advances SSM state over exactly its
+  valid span at its own depth.  ONE compiled program serves the whole step
+  (S = ``prefill_chunk`` when any prefill is pending, else 1 — two compiled
+  shapes total), every mid-prefill slot advances every step (no round-robin
+  serialization), and the per-slot cache rows are written in place (the
+  legacy interleaved path's O(max_len/chunk) full-row gather/scatter per
+  chunk is gone).  Each fused forward's wall time is split into decode and
+  prefill shares by the cost model's predicted per-stage fractions before
+  it is recorded, so observation-window hygiene is preserved.
+  ``fused=False`` restores the PR-5 interleaved path (one batch-1 chunk
+  between decode steps).
 """
 
 from __future__ import annotations
@@ -138,6 +153,13 @@ class ServingEngine:
             ``prefill_chunk`` so the planner scores the prefill schedule
             the engine actually runs.  Chunking engages in ragged batching
             only — lockstep keeps the seed engine's blocking prefill.
+        fused: pack pending prefill chunks INTO the batched ragged decode
+            forward (per-row ``(cache_pos, q_len)``) so one compiled
+            program serves the whole step.  Defaults to the plan config's
+            ``fused_prefill`` ("score what the engine runs"); only engages
+            when chunked prefill is on (ragged batching + a chunk size).
+            ``False`` restores the PR-5 interleaved path: one batch-1
+            chunk forward between decode steps.
         oversize: what to do with a request whose ``prompt +
             max_new_tokens`` cannot fit a ``max_len`` cache row:
             ``"truncate"`` (default) drops the OLDEST prompt tokens to fit
@@ -166,6 +188,7 @@ class ServingEngine:
         admission: str = "queue",
         batching: str = "ragged",
         prefill_chunk: Any = _FROM_PLAN,
+        fused: Any = _FROM_PLAN,
         oversize: str = "truncate",
     ):
         self.cfg = cfg
@@ -217,6 +240,14 @@ class ServingEngine:
                 f"prefill_chunk must be a positive int or None, got {prefill_chunk!r}"
             )
         self.prefill_chunk = None if prefill_chunk is None else int(prefill_chunk)
+
+        # fused mixed-batch stepping follows the plan config unless
+        # overridden — same "score what the engine runs" contract as
+        # prefill_chunk (the planner's fused_prefill flag and this engage
+        # together by default)
+        if fused is ServingEngine._FROM_PLAN:
+            fused = getattr(self.plan_cfg, "fused_prefill", True)
+        self.fused = bool(fused)
 
         # adaptation loop state: the policy owns streaks/hysteresis, the
         # engine owns the applied derate map and the (derated) cost model.
@@ -438,6 +469,12 @@ class ServingEngine:
         equal-depth cohort admission is defined around completed prefills)."""
         return self.prefill_chunk is not None and self.batching == "ragged"
 
+    def _fused_on(self) -> bool:
+        """Fused mixed-batch stepping rides on chunked prefill: prefill rows
+        can only join the decode batch when prompts arrive in fixed-shape
+        chunks (ragged batching + a chunk size)."""
+        return self.fused and self._chunked_prefill_on()
+
     def _prefill_slot(self, toks):
         caches = self.executor.init_caches(1, self.max_len)
         logits, new_caches = self.executor.forward(
@@ -449,11 +486,12 @@ class ServingEngine:
         """Batch-1 view of ``slot``'s cache rows (one row per stage layer) —
         the chunk forward reads/writes the live row, not a fresh cache.
 
-        The gather here (and the scatter in ``_write_slot_cache``) copies
-        the full ``max_len`` row per layer per chunk — O(max_len/chunk)×
-        more cache traffic than the chunk writes.  Eliminating it means
-        packing the chunk INTO the batched ragged decode forward so the
-        cache row is written in place (the ROADMAP PR-5 follow-on)."""
+        LEGACY interleaved path only (``fused=False``): the gather here
+        (and the scatter in ``_write_slot_cache``) copies the full
+        ``max_len`` row per layer per chunk — O(max_len/chunk)× more cache
+        traffic than the chunk writes.  The fused path never calls either:
+        prefill chunks ride as rows of the batched forward and the per-row
+        masked KV scatter touches only the written span in place."""
         return [
             [
                 {key: layer[key][slot : slot + 1] for key in ("k", "v")}
@@ -571,8 +609,16 @@ class ServingEngine:
         decodes every step — a long prompt no longer stalls the batch.
         ``batching="lockstep"`` shares one position (the max over active
         slots) and relies on ``_admit``'s equal-depth cohort check — the
-        seed-engine behavior kept as a baseline."""
+        seed-engine behavior kept as a baseline.
+
+        With ``fused`` on (the default when chunking is on), the step runs
+        ONE fused forward instead: pending prefill chunks pack into the
+        decode batch as rows with their own ``(cache_pos, q_len)``, every
+        mid-prefill slot advances a chunk every step, and the compiled
+        program count per step drops from two to one."""
         self._admit()
+        if self._fused_on():
+            return self._step_fused()
         adv_slot = self._advance_prefill() if self._prefill_toks else None
         # decode-ready slots: active AND fully prefilled
         idx = [
@@ -619,6 +665,92 @@ class ServingEngine:
             if self._steps_since_window >= ws:
                 self.observe_window()
         return len(progressed)
+
+    def _fused_decode_frac(self, n_prefill_rows: int) -> Optional[List[float]]:
+        """Predicted decode share of each stage's wall time in a fused
+        forward carrying ``n_prefill_rows`` chunk rows — splits the single
+        observed sample into a decode and a prefill part so neither op
+        class pollutes the other's observation window."""
+        if n_prefill_rows <= 0:
+            return None                       # pure decode: 1.0 everywhere
+        dec = self._pred_stage_s
+        pre = self._pred_prefill_stage_s
+        fracs = []
+        for i, d in enumerate(dec):
+            p = n_prefill_rows * (pre[i] if i < len(pre) else 0.0)
+            fracs.append(d / (d + p) if d + p > 0 else 1.0)
+        return fracs
+
+    def _step_fused(self) -> int:
+        """One FUSED engine iteration: decode-ready slots, mid-prefill
+        slots, and idle slots ride one ``[slots, S]`` forward with per-row
+        ``(cache_pos, q_len)`` — S is ``prefill_chunk`` when any prefill is
+        pending, else 1 (two compiled shapes total).  Decode rows carry
+        ``q_len=1`` at their decode depth, prefill rows their chunk at its
+        offset, idle rows ``q_len=0`` (they write NOTHING — unlike the
+        legacy path's garbage rows).  Every mid-prefill slot advances every
+        step, and the slot cache rows are written in place (no
+        ``_slot_row_caches`` gather / ``_write_slot_cache`` scatter)."""
+        idx = [
+            i for i, r in enumerate(self.active)
+            if r is not None and i not in self._prefill_toks
+        ]
+        pf_slots = sorted(self._prefill_toks)
+        if not idx and not pf_slots:
+            return 0
+        if self.caches is None:
+            self.caches = self.executor.init_caches(self.slots, self.max_len)
+        s = self.prefill_chunk if pf_slots else 1
+        tokens = np.zeros((self.slots, s), dtype=np.int32)
+        q_lens = np.zeros(self.slots, dtype=np.int32)
+        cache_pos = np.zeros(self.slots, dtype=np.int32)
+        for i in idx:
+            tokens[i, 0] = self.active[i].out_tokens[-1]
+            q_lens[i] = 1
+            cache_pos[i] = self.slot_pos[i]
+        pf_n: Dict[int, int] = {}
+        for i in pf_slots:
+            done = self._prefill_done[i]
+            toks_all = self._prefill_toks[i]
+            n = min(self.prefill_chunk, len(toks_all) - done)
+            tokens[i, :n] = toks_all[done : done + n]
+            q_lens[i] = n
+            cache_pos[i] = done
+            pf_n[i] = n
+        logits, self.caches = self.executor.forward(
+            jnp.asarray(tokens),
+            self.caches,
+            cache_pos=cache_pos,
+            kind="fused",
+            q_lens=jnp.asarray(q_lens),
+            fused_decode_frac=self._fused_decode_frac(len(pf_slots)),
+        )
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))      # [slots, S]
+        for i in idx:
+            req = self.active[i]
+            req.out_tokens.append(int(nxt[i, 0]))
+            self.slot_pos[i] += 1
+            self._maybe_retire(i, int(nxt[i, 0]))
+        for i in pf_slots:
+            n = pf_n[i]
+            done = self._prefill_done[i] + n
+            self._prefill_done[i] = done
+            self.slot_pos[i] = done
+            if done == len(self._prefill_toks[i]):
+                del self._prefill_toks[i]
+                del self._prefill_done[i]
+                req = self.active[i]
+                # next token from the last REAL prompt row of the chunk
+                tok = int(nxt[i, n - 1])
+                req.out_tokens.append(tok)
+                self._maybe_retire(i, tok)
+        # closed loop: fused steps that decoded count toward the window
+        ws = self.policy.config.window_steps
+        if idx and ws > 0:
+            self._steps_since_window += 1
+            if self._steps_since_window >= ws:
+                self.observe_window()
+        return len(set(idx) | set(pf_slots))
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
         """Step until the queue and all slots are empty (or ``max_steps``).
@@ -1009,6 +1141,12 @@ class ServingEngine:
                 "chunk": (
                     self.prefill_chunk if self._chunked_prefill_on() else None
                 ),
+                # fused mode: these stats are the PREFILL SHARE of each
+                # fused forward (the executor splits one wall-clock sample
+                # into decode/prefill parts by the predicted per-stage
+                # fractions), so per-chunk predictions stay comparable and
+                # the decode section above stays prompt-burst-proof
+                "fused": self._fused_on(),
                 "stages": pre_stats,
             },
         }

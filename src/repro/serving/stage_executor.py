@@ -128,7 +128,7 @@ class StageExecutor:
         st = self.stages[si]
         windows = [int(self._windows[i]) for i in st.layer_ids]
 
-        def run(sp, x, positions, caches, cache_pos):
+        def run(sp, x, positions, caches, cache_pos, q_lens=None):
             new_caches = []
             if st.first:
                 tokens = x
@@ -143,6 +143,7 @@ class StageExecutor:
                     window=jnp.asarray(windows[j], jnp.int32),
                     kv_cache=cache_j,
                     cache_pos=cache_pos,
+                    q_lens=q_lens,
                 )
                 new_caches.append(nc)
             if st.last:
@@ -182,14 +183,25 @@ class StageExecutor:
         cache_pos=None,               # int scalar, or (B,) int vector (ragged
                                       # decode: one cache depth per slot row)
         *,
-        kind: Optional[str] = None,   # "decode" | "prefill" sample tag;
-                                      # None infers from the token count
+        kind: Optional[str] = None,   # "decode" | "prefill" | "fused" sample
+                                      # tag; None infers from the token count
+        q_lens=None,                  # (B,) valid tokens per row — the fused
+                                      # mixed-batch ragged shape (decode rows
+                                      # 1, prefill chunks n, idle rows 0)
+        fused_decode_frac: Optional[List[float]] = None,
+                                      # kind="fused": predicted decode share
+                                      # of each stage's wall time — one fused
+                                      # forward records a ("decode", dt·f) AND
+                                      # a ("prefill", dt·(1−f)) sample so the
+                                      # calibrator's windows stay clean
     ):
         b, s = tokens.shape
         if kind is None:
             kind = "prefill" if s > 1 else "decode"
-        elif kind not in ("decode", "prefill"):
-            raise ValueError(f"kind must be 'decode' or 'prefill', got {kind!r}")
+        elif kind not in ("decode", "prefill", "fused"):
+            raise ValueError(
+                f"kind must be 'decode', 'prefill' or 'fused', got {kind!r}"
+            )
         cp = jnp.asarray(0 if cache_pos is None else cache_pos, jnp.int32)
         # per-row positions: row b decodes at depth cp[b] (scalar cp → all
         # rows share one depth, the classic lockstep batch)
@@ -197,6 +209,7 @@ class StageExecutor:
             cp[:, None] if cp.ndim else cp
         )
         positions = jnp.broadcast_to(positions, (b, s))
+        ql = None if q_lens is None else jnp.asarray(q_lens, jnp.int32)
         x = tokens
         new_caches = []
         for si, st in enumerate(self.stages):
@@ -206,9 +219,22 @@ class StageExecutor:
             if fn is None:
                 fn = self._fns[si] = self._stage_fn(si)
             st_caches = caches[si] if caches is not None else None
-            x, nc = fn(self.stage_params[si], x, positions, st_caches, cp)
+            x, nc = fn(self.stage_params[si], x, positions, st_caches, cp, ql)
             x.block_until_ready()
-            self._stage_times[si].append((kind, time.perf_counter() - t0))
+            dt = time.perf_counter() - t0
+            if kind == "fused":
+                # split the single wall-clock sample by the cost model's
+                # predicted decode share so neither op class pollutes the
+                # other's observation window (prefill work scales with the
+                # chunk; scoring it as decode reads as device drift)
+                f = 1.0 if fused_decode_frac is None else float(fused_decode_frac[si])
+                f = min(max(f, 0.0), 1.0)
+                if f > 0.0:
+                    self._stage_times[si].append(("decode", dt * f))
+                if f < 1.0:
+                    self._stage_times[si].append(("prefill", dt * (1.0 - f)))
+            else:
+                self._stage_times[si].append((kind, dt))
             new_caches.append(nc)
         return x, new_caches
 

@@ -408,12 +408,16 @@ def test_engine_derates_device_hosting_majority_of_stages(small_model):
 
 def test_engine_hot_swap_resumes_in_flight_requests(small_model):
     """A mid-generation replan re-queues active requests; greedy decode
-    resumes from prompt+generated and produces the identical output."""
+    resumes from prompt+generated and produces the identical output.
+
+    ``fused=False`` pins the PR-5 interleaved engine's step cadence (one
+    prefill chunk AND a decode per step); the fused path's cadence is
+    covered in test_fused_step.py."""
     cfg, model, params = small_model
     cluster = tpu_slice_cluster(n_slices=1)
     mk = lambda: ServingEngine(cfg, params, cluster, slots=1, max_len=64,
                                plan_cfg=PlanConfig(method="round_robin"),
-                               eos_id=-1)
+                               eos_id=-1, fused=False)
     ref_eng = mk()
     ref = Request(rid=0, prompt=[1, 2, 3], max_new_tokens=6)
     ref_eng.submit(ref)

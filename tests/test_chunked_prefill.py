@@ -159,7 +159,8 @@ def test_engine_chunked_prefill_matches_blocking_and_sequential(small_model):
     ]
     outs = {}
     for name, kw in (
-        ("chunked", dict(prefill_chunk=8)),
+        ("chunked", dict(prefill_chunk=8)),                  # fused (default)
+        ("interleaved", dict(prefill_chunk=8, fused=False)), # PR-5 path
         ("blocking", dict(prefill_chunk=None)),
     ):
         eng = _mk_engine(cfg, params, slots=3, **kw)
@@ -177,14 +178,18 @@ def test_engine_chunked_prefill_matches_blocking_and_sequential(small_model):
         e.submit(r)
         e.run_until_drained()
         solo.append(r.out_tokens)
-    assert outs["chunked"] == outs["blocking"] == solo
+    assert outs["chunked"] == outs["interleaved"] == outs["blocking"] == solo
 
 
 def test_engine_chunked_prefill_no_starvation(small_model):
     """Active slots decode between EVERY chunk: while a long prompt streams
-    in, the co-resident request gains one token per engine step."""
+    in, the co-resident request gains one token per engine step.
+
+    ``fused=False`` pins the PR-5 interleaved round-robin state machine
+    (``_advance_prefill``); the fused path's no-starvation property is
+    covered in test_fused_step.py."""
     cfg, model, params = small_model
-    eng = _mk_engine(cfg, params, slots=2, prefill_chunk=4)
+    eng = _mk_engine(cfg, params, slots=2, prefill_chunk=4, fused=False)
     short = Request(rid=0, prompt=[1, 2], max_new_tokens=30)
     eng.submit(short)
     eng.step()                     # short admitted (single chunk) + decoding
@@ -506,17 +511,22 @@ def test_bottleneck_time_sees_prefill_work():
 
 def test_plan_and_milp_score_prefill_work():
     """PlanConfig.prompt_len threads into candidate scoring and the MILP's
-    busy accumulators: the reported throughput objective includes prefill."""
+    busy accumulators: the reported throughput objective includes prefill.
+
+    ``fused_prefill=False`` pins the PR-5 standalone per-chunk costing
+    (each chunk pays its own weight stream); the fused-rate default is
+    covered in test_fused_step.py."""
     cfg = get_config("llama3.2-1b").smoke()
     g = transformer_graph(cfg, seq_len=64, granularity="block")
     cl = tpu_slice_cluster(n_slices=2, heterogeneous=True)
     res0 = plan(g, cl, PlanConfig(
         method="moirai", objective="throughput", time_limit=10,
-        mip_rel_gap=0.05,
+        mip_rel_gap=0.05, fused_prefill=False,
     ))
     res1 = plan(g, cl, PlanConfig(
         method="moirai", objective="throughput", time_limit=10,
         mip_rel_gap=0.05, prompt_len=2048, prefill_chunk=64,
+        fused_prefill=False,
     ))
     assert res0.extra["prompt_len"] == 0
     assert res1.extra["prompt_len"] == 2048

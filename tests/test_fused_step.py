@@ -1,0 +1,843 @@
+"""One fused forward per engine step (ISSUE 6).
+
+Covers the tentpole and its satellites:
+
+* pallas-vs-naive kernel parity on ragged ``(cache_pos, q_len)`` rows —
+  decode rows, partial prefill chunks at arbitrary offsets, idle rows —
+  including gemma2 sliding-window masks;
+* fused-vs-sequential greedy token identity, property-tested (hypothesis,
+  or the deterministic shim) — at the model level across families
+  (dense, gemma2 windows, pure-SSM, hybrid, MoE, enc-dec) and attention
+  impls (naive/chunked/pallas), and at the engine level;
+* the engine's fused step — ONE forward per step over exactly two
+  compiled shapes, every mid-prefill slot advances every step, no
+  full-cache-row gather/scatter (the ``_slot_row_caches`` copies are
+  legacy-only), KV writes touch only each row's written span;
+* regressions — ``batching="lockstep"``, ``prefill_chunk=None`` and the
+  PR-5 interleaved path are bit-identical with fused off, and
+  ``validate_pipeline_schedule`` still rejects schedules violating
+  per-chunk precedence or decode-after-prefill ordering;
+* observation-window hygiene — one fused forward splits into per-class
+  decode/prefill samples, a long-prompt burst commits no decode derate;
+* fused-aware scoring — ``CostModel.marginal_compute_time``,
+  ``prefill_busy``/``bottleneck_time``/``simulate_pipeline``/MILP
+  ``fused_prefill``, and ``PlanConfig.fused_prefill`` driving BOTH the
+  planner's numbers and the engine's serving path.
+"""
+
+import copy
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import hypothesis, st
+from repro.configs import get_config
+from repro.core.costmodel import CostModel
+from repro.core.devices import inter_server_cluster, tpu_slice_cluster
+from repro.core.modelgraph import transformer_graph
+from repro.core.placement import PlanConfig, plan
+from repro.core.simulate import (
+    bottleneck_time,
+    fused_prefill_compute_time,
+    prefill_busy,
+    prefill_compute_time,
+    scale_node_to_tokens,
+    simulate_pipeline,
+    validate_pipeline_schedule,
+)
+from repro.models.model import build_model
+from repro.serving.adaptation import AdaptationConfig
+from repro.serving.engine import Request, ServingEngine
+
+
+# memoized instead of a fixture: the hypothesis shim's @given wrapper hides
+# the test signature from pytest, so drawn-arg tests can't take fixtures
+@functools.lru_cache(maxsize=None)
+def _model(arch="llama3.2-1b", impl=None):
+    cfg = get_config(arch).smoke()
+    if impl is not None:
+        cfg = dataclasses.replace(cfg, attention_impl=impl)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _mk_engine(cfg, params, slots, **kw):
+    cluster = tpu_slice_cluster(n_slices=1)
+    kw.setdefault("plan_cfg", PlanConfig(method="etf"))
+    kw.setdefault("eos_id", -1)
+    kw.setdefault("max_len", 64)
+    return ServingEngine(cfg, params, cluster, slots=slots, **kw)
+
+
+# ----------------------------------------------------------------------
+# kernel: pallas vs naive reference on ragged (cache_pos, q_len) rows
+# ----------------------------------------------------------------------
+
+
+def _naive_ragged(q, k, v, cache_pos, q_lens, *, scale, window=0, softcap=0.0):
+    """Row-by-row oracle: row b's query i sits at position cache_pos[b]+i,
+    attends causally (optionally windowed) over the whole KV buffer; query
+    rows at or beyond q_lens[b] output exact zeros."""
+    q = np.asarray(q, np.float64)
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    rep = h // kv
+    kk = np.repeat(np.asarray(k, np.float64), rep, axis=2)
+    vv = np.repeat(np.asarray(v, np.float64), rep, axis=2)
+    out = np.zeros((b, sq, h, d), np.float64)
+    for bi in range(b):
+        for qi in range(int(q_lens[bi])):
+            qp = int(cache_pos[bi]) + qi
+            mask = np.arange(sk) <= qp
+            if window:
+                mask &= np.arange(sk) > qp - window
+            for hi in range(h):
+                s = (kk[bi, :, hi] @ q[bi, qi, hi]) * scale
+                if softcap:
+                    s = softcap * np.tanh(s / softcap)
+                s = np.where(mask, s, -np.inf)
+                p = np.exp(s - s.max())
+                p /= p.sum()
+                out[bi, qi, hi] = p @ vv[bi, :, hi]
+    return out
+
+
+# the four fused row kinds in one batch: full chunk at 0, decode row deep
+# in the cache, partial tail chunk at an offset, idle row
+_ROWS = [(0, 8), (19, 1), (13, 5), (0, 0)]
+
+
+@pytest.mark.parametrize("window,softcap", [(0, 0.0), (7, 30.0)])
+def test_pallas_fused_rows_match_naive_ref(window, softcap):
+    """The pallas kernel's per-row (q_offsets, q_lens) scalar-prefetch masks
+    match the naive oracle on a mixed batch — plain causal and the gemma2
+    window+softcap configuration — and fully-masked padding rows are zero."""
+    from repro.kernels.flash_attention.ops import flash_attention
+
+    rng = np.random.default_rng(11)
+    b, sq, sk, h, kv, d = len(_ROWS), 8, 24, 4, 2, 64
+    q = jnp.asarray(rng.standard_normal((b, sq, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, sk, kv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, sk, kv, d)), jnp.float32)
+    cache_pos = np.asarray([r[0] for r in _ROWS], np.int32)
+    q_lens = np.asarray([r[1] for r in _ROWS], np.int32)
+    scale = 1.0 / np.sqrt(d)
+    q_pos = cache_pos[:, None] + np.arange(sq, dtype=np.int32)[None]
+    out = flash_attention(
+        q, k, v, jnp.asarray(q_pos), None, jnp.asarray(q_lens),
+        scale=scale, causal=True, window=window or None,
+        softcap=softcap or None, interpret=True,
+    )
+    ref = _naive_ragged(
+        q, k, v, cache_pos, q_lens, scale=scale, window=window,
+        softcap=softcap,
+    )
+    np.testing.assert_allclose(np.asarray(out, np.float64), ref, atol=2e-5)
+    # idle row and every padding query row are EXACT zeros (not just small)
+    arr = np.asarray(out)
+    for bi, (_, n) in enumerate(_ROWS):
+        assert not arr[bi, n:].any(), f"row {bi} padding queries leaked"
+
+
+@pytest.mark.slow
+@hypothesis.settings(max_examples=15, deadline=None)
+@hypothesis.given(
+    seed=st.integers(0, 10**6),
+    sq=st.integers(1, 12),
+    window=st.integers(0, 9),
+)
+def test_pallas_fused_rows_property(seed, sq, window):
+    """Random (cache_pos, q_len) compositions against the oracle."""
+    from repro.kernels.flash_attention.ops import flash_attention
+
+    rng = np.random.default_rng(seed)
+    b, sk, h, kv, d = 3, 32, 2, 1, 64
+    q = jnp.asarray(rng.standard_normal((b, sq, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, sk, kv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, sk, kv, d)), jnp.float32)
+    q_lens = rng.integers(0, sq + 1, size=b).astype(np.int32)
+    cache_pos = np.asarray(
+        [rng.integers(0, sk - int(n) + 1) for n in q_lens], np.int32
+    )
+    scale = 1.0 / np.sqrt(d)
+    q_pos = cache_pos[:, None] + np.arange(sq, dtype=np.int32)[None]
+    out = flash_attention(
+        q, k, v, jnp.asarray(q_pos), None, jnp.asarray(q_lens),
+        scale=scale, causal=True, window=window or None, interpret=True,
+    )
+    ref = _naive_ragged(q, k, v, cache_pos, q_lens, scale=scale, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float64), ref, atol=2e-5)
+
+
+# ----------------------------------------------------------------------
+# model level: fused mixed-batch steps == sequential single-request serving
+# ----------------------------------------------------------------------
+
+
+def _sequential(model, params, prompt, max_new, *, chunk, max_len):
+    """Reference: one request served alone, chunked prefill + 1-token decode
+    steps (the PR-5-verified path)."""
+    batch = {"tokens": jnp.asarray([prompt], jnp.int32)}
+    logits, caches = model.prefill_chunked(params, batch, max_len, chunk=chunk)
+    toks = [int(jnp.argmax(logits[0]))]
+    pos = len(prompt)
+    while len(toks) < max_new:
+        t = jnp.asarray([[toks[-1]]], jnp.int32)
+        logits, caches = model.decode_step(
+            params, {"tokens": t}, caches, jnp.asarray(pos, jnp.int32)
+        )
+        toks.append(int(jnp.argmax(logits[0])))
+        pos += 1
+    return toks
+
+
+def _fused_generate(model, params, prompts, max_news, *, chunk, max_len):
+    """Model-level mirror of the engine's ``_step_fused``: all rows share one
+    fused forward per step — prefill rows stream their next chunk, decode
+    rows feed their last token, finished rows idle at ``q_len=0``."""
+    b = len(prompts)
+    caches = model.init_cache(b, max_len)
+    done = [0] * b
+    out = [[] for _ in range(b)]
+    finished = [False] * b
+    steps = 0
+    while not all(finished):
+        steps += 1
+        assert steps < 10_000, "fused driver stalled"
+        s = chunk if any(
+            done[i] < len(prompts[i]) for i in range(b) if not finished[i]
+        ) else 1
+        toks = np.zeros((b, s), np.int32)
+        q_lens = np.zeros(b, np.int32)
+        cache_pos = np.zeros(b, np.int32)
+        pf = {}
+        for i in range(b):
+            if finished[i]:
+                continue                         # idle row: q_len stays 0
+            if done[i] < len(prompts[i]):
+                n = min(chunk, len(prompts[i]) - done[i])
+                toks[i, :n] = prompts[i][done[i]:done[i] + n]
+                q_lens[i] = n
+                cache_pos[i] = done[i]
+                pf[i] = n
+            else:
+                toks[i, 0] = out[i][-1]
+                q_lens[i] = 1
+                cache_pos[i] = len(prompts[i]) + len(out[i]) - 1
+        logits, caches = model.fused_step(
+            params, {"tokens": jnp.asarray(toks)}, caches,
+            jnp.asarray(cache_pos), jnp.asarray(q_lens),
+        )
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i in range(b):
+            if finished[i]:
+                continue
+            if i in pf:
+                done[i] += pf[i]
+                if done[i] == len(prompts[i]):
+                    out[i].append(int(nxt[i, pf[i] - 1]))
+            else:
+                out[i].append(int(nxt[i, 0]))
+            if len(out[i]) >= max_news[i]:
+                finished[i] = True
+    return out
+
+
+def _check_fused_identity(model, params, prompts, max_news, *, chunk, max_len):
+    fused = _fused_generate(
+        model, params, prompts, max_news, chunk=chunk, max_len=max_len
+    )
+    for i, (p, m) in enumerate(zip(prompts, max_news)):
+        seq = _sequential(model, params, p, m, chunk=chunk, max_len=max_len)
+        assert fused[i] == seq, (i, fused[i], seq)
+
+
+def _mixed_prompts(seed, b, lo=1, hi=13):
+    rng = np.random.default_rng(seed)
+    prompts = [
+        [int(t) for t in rng.integers(1, 180, size=int(rng.integers(lo, hi)))]
+        for _ in range(b)
+    ]
+    # uneven budgets force idle rows: some rows finish while others decode
+    max_news = [int(rng.integers(1, 6)) for _ in range(b)]
+    return prompts, max_news
+
+
+@pytest.mark.parametrize("chunk", [1, 4])
+def test_fused_step_token_identity_dense(chunk):
+    """Mixed prefill/decode/idle rows in ONE forward reproduce sequential
+    single-request serving bit-for-bit (chunk boundaries, idle rows)."""
+    cfg, model, params = _model()
+    prompts, max_news = _mixed_prompts(2, b=3)
+    _check_fused_identity(model, params, prompts, max_news, chunk=chunk, max_len=32)
+
+
+@hypothesis.settings(max_examples=4, deadline=None)
+@hypothesis.given(seed=st.integers(0, 10**6), chunk=st.integers(1, 6))
+def test_fused_step_token_identity_property(seed, chunk):
+    """Property: ANY composition of prompt lengths, chunk size and budgets
+    is greedy-token-identical to sequential serving (dense, fast tier)."""
+    cfg, model, params = _model()
+    prompts, max_news = _mixed_prompts(seed, b=3)
+    _check_fused_identity(model, params, prompts, max_news, chunk=chunk, max_len=32)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize(
+    "arch",
+    ["gemma2-27b", "mamba2-130m", "zamba2-2.7b", "qwen3-14b", "qwen2-moe-a2.7b"],
+)
+def test_fused_step_token_identity_across_archs(arch):
+    """Sliding-window (gemma2), pure-SSM (mamba2: dt-masked state updates +
+    per-row conv tails), hybrid (zamba2), qk-norm dense and MoE all match
+    sequential serving under fused mixed batches."""
+    cfg, model, params = _model(arch)
+    for seed, chunk in ((0, 1), (1, 3), (2, 6)):
+        prompts, max_news = _mixed_prompts(seed, b=3, hi=11)
+        _check_fused_identity(
+            model, params, prompts, max_news, chunk=chunk, max_len=32
+        )
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("impl", ["naive", "chunked", "pallas"])
+def test_fused_step_token_identity_attention_impls(impl):
+    """All three attention implementations agree on ragged (cache_pos,
+    q_len) rows — the naive/chunked refs zero invalid query outputs exactly
+    like the pallas kernel's fully-masked rows."""
+    cfg, model, params = _model(impl=impl)
+    for seed, chunk in ((3, 1), (4, 2), (5, 5)):
+        prompts, max_news = _mixed_prompts(seed, b=3, hi=9)
+        _check_fused_identity(
+            model, params, prompts, max_news, chunk=chunk, max_len=32
+        )
+
+
+def test_fused_step_token_identity_encdec():
+    """Enc-dec: encoder + cross-KV run once; fused decoder steps (self-attn
+    masked-span writes + cross-attn output zeroing) match sequential."""
+    cfg = get_config("seamless-m4t-large-v2").smoke()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    from repro.models import encdec
+
+    rng = np.random.default_rng(1)
+    max_len = 32
+    prompts = [
+        [int(t) for t in rng.integers(1, 100, size=n)] for n in (9, 3, 5)
+    ]
+    max_news = [3, 1, 4]
+    b = len(prompts)
+    frames = jnp.asarray(rng.normal(size=(b, 4, cfg.d_model)), jnp.float32)
+
+    # cross K/V from one encoder pass (a throwaway 1-token prefill builds
+    # it); the fused driver then streams the decoder prompts from scratch
+    _, seeded = model.prefill(
+        params, {"frames": frames, "tokens": jnp.zeros((b, 1), jnp.int32)},
+        max_len,
+    )
+    chunk = 4
+
+    def fused_gen():
+        caches = {
+            "self": encdec.init_self_cache(cfg, b, max_len),
+            "cross": seeded["cross"],
+        }
+        done = [0] * b
+        out = [[] for _ in range(b)]
+        finished = [False] * b
+        while not all(finished):
+            s = chunk if any(
+                done[i] < len(prompts[i]) for i in range(b) if not finished[i]
+            ) else 1
+            toks = np.zeros((b, s), np.int32)
+            q_lens = np.zeros(b, np.int32)
+            cache_pos = np.zeros(b, np.int32)
+            pf = {}
+            for i in range(b):
+                if finished[i]:
+                    continue
+                if done[i] < len(prompts[i]):
+                    n = min(chunk, len(prompts[i]) - done[i])
+                    toks[i, :n] = prompts[i][done[i]:done[i] + n]
+                    q_lens[i], cache_pos[i], pf[i] = n, done[i], n
+                else:
+                    toks[i, 0] = out[i][-1]
+                    q_lens[i] = 1
+                    cache_pos[i] = len(prompts[i]) + len(out[i]) - 1
+            logits, caches = model.fused_step(
+                params, {"tokens": jnp.asarray(toks)}, caches,
+                jnp.asarray(cache_pos), jnp.asarray(q_lens),
+            )
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            for i in range(b):
+                if finished[i]:
+                    continue
+                if i in pf:
+                    done[i] += pf[i]
+                    if done[i] == len(prompts[i]):
+                        out[i].append(int(nxt[i, pf[i] - 1]))
+                else:
+                    out[i].append(int(nxt[i, 0]))
+                if len(out[i]) >= max_news[i]:
+                    finished[i] = True
+        return out
+
+    fused = fused_gen()
+    for i in range(b):
+        batch = {
+            "frames": frames[i:i + 1],
+            "tokens": jnp.asarray([prompts[i]], jnp.int32),
+        }
+        logits, caches = model.prefill_chunked(params, batch, max_len, chunk=chunk)
+        seq = [int(jnp.argmax(logits[0]))]
+        pos = len(prompts[i])
+        while len(seq) < max_news[i]:
+            logits, caches = model.decode_step(
+                params, {"tokens": jnp.asarray([[seq[-1]]], jnp.int32)},
+                caches, jnp.asarray(pos, jnp.int32),
+            )
+            seq.append(int(jnp.argmax(logits[0])))
+            pos += 1
+        assert fused[i] == seq, (i, fused[i], seq)
+
+
+def test_fused_kv_writes_touch_only_written_span():
+    """Satellite 3 (model level): one fused forward writes EXACTLY each
+    row's ``[cache_pos, cache_pos + q_len)`` KV span — idle rows, padding
+    rows and everything outside the span stay bit-identical zeros."""
+    cfg, model, params = _model()
+    rng = np.random.default_rng(9)
+    max_len, chunk = 32, 6
+    caches = model.init_cache(3, max_len)
+    toks = np.zeros((3, chunk), np.int32)
+    toks[0, :4] = rng.integers(1, 100, 4)       # partial chunk at offset 7
+    toks[1, 0] = 42                              # decode row at depth 11
+    cache_pos = np.asarray([7, 11, 0], np.int32)
+    q_lens = np.asarray([4, 1, 0], np.int32)
+    _, new_caches = model.fused_step(
+        params, {"tokens": jnp.asarray(toks)}, caches,
+        jnp.asarray(cache_pos), jnp.asarray(q_lens),
+    )
+    k = np.asarray(new_caches["layers"]["k"])    # [L, B, max_len, KV, HD]
+    v = np.asarray(new_caches["layers"]["v"])
+    spans = [(7, 11), (11, 12), (0, 0)]
+    for bi, (lo, hi) in enumerate(spans):
+        outside = np.r_[0:lo, hi:max_len]
+        assert not k[:, bi, outside].any(), f"row {bi} K written outside span"
+        assert not v[:, bi, outside].any(), f"row {bi} V written outside span"
+        if hi > lo:
+            assert k[:, bi, lo:hi].any(), f"row {bi} span not written"
+
+
+# ----------------------------------------------------------------------
+# engine: one fused forward per step
+# ----------------------------------------------------------------------
+
+
+def test_engine_fused_matches_interleaved_and_sequential():
+    """The fused engine emits exactly the tokens of the PR-5 interleaved
+    engine AND of each request served alone — including windows where
+    several long prompts stream concurrently."""
+    cfg, model, params = _model()
+    rng = np.random.default_rng(6)
+    spec = [
+        ([int(t) for t in rng.integers(1, 200, size=int(rng.integers(2, 40)))],
+         int(rng.integers(2, 7)))
+        for _ in range(6)
+    ]
+    outs = {}
+    for name, fused in (("fused", True), ("interleaved", False)):
+        eng = _mk_engine(cfg, params, slots=3, prefill_chunk=8, fused=fused)
+        reqs = [Request(rid=i, prompt=list(p), max_new_tokens=m)
+                for i, (p, m) in enumerate(spec)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_drained()
+        assert all(r.done for r in reqs)
+        outs[name] = [r.out_tokens for r in reqs]
+    solo = []
+    for i, (p, m) in enumerate(spec):
+        e = _mk_engine(cfg, params, slots=1, prefill_chunk=8)
+        r = Request(rid=i, prompt=list(p), max_new_tokens=m)
+        e.submit(r)
+        e.run_until_drained()
+        solo.append(r.out_tokens)
+    assert outs["fused"] == outs["interleaved"] == solo
+
+
+@hypothesis.settings(max_examples=3, deadline=None)
+@hypothesis.given(seed=st.integers(0, 10**6), chunk=st.integers(1, 9))
+def test_engine_fused_token_identity_property(seed, chunk):
+    """Property (engine level): any mixed workload under any chunk size is
+    token-identical to each request served alone."""
+    cfg, model, params = _model()
+    rng = np.random.default_rng(seed)
+    spec = [
+        ([int(t) for t in rng.integers(1, 200, size=int(rng.integers(1, 25)))],
+         int(rng.integers(1, 5)))
+        for _ in range(4)
+    ]
+    eng = _mk_engine(cfg, params, slots=2, prefill_chunk=chunk)
+    assert eng._fused_on()
+    reqs = [Request(rid=i, prompt=list(p), max_new_tokens=m)
+            for i, (p, m) in enumerate(spec)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained()
+    for r, (p, m) in zip(reqs, spec):
+        e = _mk_engine(cfg, params, slots=1, prefill_chunk=chunk)
+        solo = Request(rid=r.rid, prompt=list(p), max_new_tokens=m)
+        e.submit(solo)
+        e.run_until_drained()
+        assert r.out_tokens == solo.out_tokens
+
+
+def test_fused_one_forward_per_step_two_shapes(monkeypatch):
+    """The tentpole contract: every fused step is exactly ONE executor
+    forward, all mid-prefill slots advance each step, and the whole serve
+    uses exactly two batch shapes — (slots, chunk) and (slots, 1)."""
+    cfg, model, params = _model()
+    eng = _mk_engine(cfg, params, slots=3, prefill_chunk=4)
+    calls = []
+    orig = eng.executor.forward
+
+    def spy(tokens, *a, **kw):
+        calls.append(tuple(tokens.shape))
+        return orig(tokens, *a, **kw)
+
+    monkeypatch.setattr(eng.executor, "forward", spy)
+    rng = np.random.default_rng(3)
+    reqs = [
+        Request(rid=i,
+                prompt=[int(t) for t in rng.integers(1, 200, size=n)],
+                max_new_tokens=3)
+        for i, n in enumerate((17, 13, 2))
+    ]
+    for r in reqs:
+        eng.submit(r)
+    eng.step()                         # admit + first fused step
+    assert len(calls) == 1, "fused step must issue ONE forward"
+    # two long prompts stream CONCURRENTLY: both advance one chunk per step
+    before = dict(eng._prefill_done)
+    assert len(before) >= 2, "expected >=2 slots mid-prefill at once"
+    eng.step()
+    assert len(calls) == 2, "fused step must issue ONE forward"
+    for slot, done in before.items():
+        if slot in eng._prefill_done:
+            assert eng._prefill_done[slot] > done, (
+                f"slot {slot} did not advance its chunk this step"
+            )
+    eng.run_until_drained()
+    assert all(r.done for r in reqs)
+    assert set(calls) <= {(3, 4), (3, 1)}, calls
+    assert (3, 4) in calls and (3, 1) in calls
+
+
+def test_fused_path_never_copies_full_cache_rows(monkeypatch):
+    """Satellite 3 (engine level): the fused path never calls the legacy
+    full-row gather/scatter (``_slot_row_caches`` / ``_write_slot_cache``)
+    — chunk KV lands via the in-place masked-span write only."""
+    cfg, model, params = _model()
+    eng = _mk_engine(cfg, params, slots=2, prefill_chunk=4)
+    assert eng._fused_on()
+
+    def boom(*a, **kw):
+        raise AssertionError(
+            "fused path must not gather/scatter full cache rows"
+        )
+
+    monkeypatch.setattr(eng, "_slot_row_caches", boom)
+    monkeypatch.setattr(eng, "_write_slot_cache", boom)
+    rng = np.random.default_rng(8)
+    reqs = [
+        Request(rid=i,
+                prompt=[int(t) for t in rng.integers(1, 200, size=22)],
+                max_new_tokens=3)
+        for i in range(3)
+    ]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained()
+    assert all(r.done for r in reqs)
+
+
+def test_fused_off_modes_unaffected():
+    """Regressions: lockstep batching and blocking prefill silently ignore
+    the fused flag (``_fused_on`` requires ragged + a chunk size), the
+    engine reads its default from ``PlanConfig.fused_prefill``, and an
+    explicit constructor ``fused=`` overrides the plan."""
+    cfg, model, params = _model()
+    spec = [([1, 2, 3, 4, 5], 3), ([7, 8], 2)]
+
+    def outs(**kw):
+        eng = _mk_engine(cfg, params, slots=2, **kw)
+        reqs = [Request(rid=i, prompt=list(p), max_new_tokens=m)
+                for i, (p, m) in enumerate(spec)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_drained()
+        return eng, [r.out_tokens for r in reqs]
+
+    lock_on, o1 = outs(batching="lockstep", prefill_chunk=16, fused=True)
+    lock_off, o2 = outs(batching="lockstep", prefill_chunk=16, fused=False)
+    assert not lock_on._fused_on() and not lock_off._fused_on()
+    assert o1 == o2
+    blk_on, o3 = outs(prefill_chunk=None, fused=True)
+    assert not blk_on._fused_on()
+    assert o3 == o2
+
+    # the default comes from the plan; the kwarg overrides it
+    assert PlanConfig().fused_prefill is True
+    assert _mk_engine(cfg, params, slots=1).fused is True
+    assert _mk_engine(
+        cfg, params, slots=1,
+        plan_cfg=PlanConfig(method="etf", fused_prefill=False),
+    ).fused is False
+    assert _mk_engine(
+        cfg, params, slots=1,
+        plan_cfg=PlanConfig(method="etf", fused_prefill=False), fused=True,
+    ).fused is True
+
+
+# ----------------------------------------------------------------------
+# observation-window hygiene under fused forwards
+# ----------------------------------------------------------------------
+
+
+def test_fused_forward_splits_decode_and_prefill_samples():
+    """One fused wall-clock sample lands as BOTH a decode and a prefill
+    sample (split by the cost model's predicted shares): windows stay
+    decode-only, the report's prefill section owns the rest."""
+    cfg, model, params = _model()
+    eng = _mk_engine(cfg, params, slots=2, prefill_chunk=4)
+    rng = np.random.default_rng(2)
+    for i in range(3):
+        eng.submit(Request(
+            rid=i,
+            prompt=[int(t) for t in rng.integers(1, 200, size=20)],
+            max_new_tokens=3,
+        ))
+    eng.run_until_drained()
+    pre = eng.executor.stage_times(kind="prefill")
+    dec = eng.executor.stage_times(kind="decode")
+    assert sum(map(len, pre)) > 0 and sum(map(len, dec)) > 0
+    drained = eng._drain_window()
+    assert drained == dec, "observation windows must be decode-only"
+    assert eng.executor.stage_times() == [[] for _ in dec]
+    rep = eng.straggler_report()
+    assert rep["prefill"]["fused"] is True
+    # the report's prefill section owns every prefill share recorded (the
+    # whole-run history includes whatever earlier windows already split off)
+    assert sum(s["n"] for s in rep["prefill"]["stages"]) >= sum(map(len, pre))
+    # the split fractions are sane probabilities, and pure-decode steps
+    # record no prefill share at all
+    fr = eng._fused_decode_frac(2)
+    assert fr is not None and all(0.0 <= f <= 1.0 for f in fr)
+    assert eng._fused_decode_frac(0) is None
+
+
+def test_fused_long_prompt_burst_commits_no_derate():
+    """Satellite 4 regression: a burst of long prompts served through FUSED
+    batches (auto windows on) must not read as device drift — the per-row
+    prefill share of each fused forward never reaches the calibrator."""
+    cfg, model, params = _model()
+    eng = _mk_engine(
+        cfg, params, slots=2, prefill_chunk=4,
+        adapt=AdaptationConfig(window_steps=4, min_samples=1,
+                               confirm_windows=1, smoothing=1.0),
+    )
+    assert eng._fused_on()
+    rng = np.random.default_rng(5)
+    for i in range(4):
+        eng.submit(Request(
+            rid=i,
+            prompt=[int(t) for t in rng.integers(1, 200, size=30)],
+            max_new_tokens=6,
+        ))
+    eng.run_until_drained()
+    assert eng.policy.windows >= 1
+    assert eng.derate == {}
+    assert all(e.action not in ("derate", "underate")
+               for e in eng.adaptation_events)
+
+
+# ----------------------------------------------------------------------
+# scheduler validation: fused schedules still obey every ordering family
+# ----------------------------------------------------------------------
+
+
+def _fused_sim():
+    cfg = get_config("llama3.2-1b")
+    g = transformer_graph(cfg, seq_len=256, granularity="block")
+    cl = inter_server_cluster()
+    cm = CostModel(cl)
+    pl = {nid: i % cl.k for i, nid in enumerate(g.topo_order())}
+    res = simulate_pipeline(
+        g, pl, cm, 4, max_in_flight=2,
+        prompt_len=[96, 64, 0, 130], prefill_chunk=32, fused_prefill=True,
+    )
+    return g, cl, cm, pl, res
+
+
+def test_validate_pipeline_schedule_accepts_fused_sim():
+    """Fused scoring changes durations, not structure: chunk rounds still
+    execute strictly in order before their request's decode pass."""
+    g, cl, cm, pl, res = _fused_sim()
+    validate_pipeline_schedule(g, pl, cm, res)
+    assert res.prompt_chunks == [[32, 32, 32], [32, 32], [], [32, 32, 32, 32, 2]]
+    # fused chunks are cheaper than standalone ones — same placement, same
+    # workload, strictly earlier completion
+    base = simulate_pipeline(
+        g, pl, cm, 4, max_in_flight=2,
+        prompt_len=[96, 64, 0, 130], prefill_chunk=32, fused_prefill=False,
+    )
+    assert res.makespan < base.makespan
+
+
+def test_validate_pipeline_schedule_rejects_chunk_order_violation():
+    """A fused schedule whose chunk 1 starts before chunk 0 completes must
+    be rejected (per-chunk precedence)."""
+    g, cl, cm, pl, res = _fused_sim()
+    bad = copy.deepcopy(res)
+    # shift request 0's SECOND prefill chunk far before its first
+    for key, rec in bad.schedule.items():
+        rid, task = key
+        if rid == 0 and isinstance(task, tuple) and task[:2] == ("prefill", 1):
+            rec.start -= 1e6
+            rec.end -= 1e6
+    with pytest.raises(AssertionError, match="starts before chunk"):
+        validate_pipeline_schedule(g, pl, cm, bad)
+
+
+def test_validate_pipeline_schedule_rejects_decode_before_prefill():
+    """A fused schedule whose decode pass starts before the last prompt
+    chunk completes must be rejected (decode-after-prefill ordering)."""
+    g, cl, cm, pl, res = _fused_sim()
+    bad = copy.deepcopy(res)
+    for key, rec in bad.schedule.items():
+        rid, task = key
+        # decode-round records: everything not namespaced ("prefill", r, ...)
+        if rid == 1 and not (isinstance(task, tuple) and task and task[0] == "prefill"):
+            rec.start -= 1e6
+            rec.end -= 1e6
+    with pytest.raises(AssertionError, match="decode starts before"):
+        validate_pipeline_schedule(g, pl, cm, bad)
+
+
+# ----------------------------------------------------------------------
+# scoring: marginal rate through cost model, busy sums, MILP and plan
+# ----------------------------------------------------------------------
+
+
+def _block_graph(seq_len=256):
+    cfg = get_config("llama3.2-1b")
+    return transformer_graph(cfg, seq_len=seq_len, granularity="block")
+
+
+def test_marginal_compute_time_drops_weights_and_overhead():
+    """marginal_compute_time bills a fused-rider chunk its activation-only
+    roofline: no weight stream, no dispatch overhead — and never more than
+    the standalone pass."""
+    g = _block_graph()
+    cl = inter_server_cluster()
+    cm = CostModel(cl)
+    node = next(n for n in g.nodes.values() if n.op_type == "block")
+    for k in range(cl.k):
+        dev = cl.devices[k]
+        full = cm.compute_time(node, k)
+        marg = cm.marginal_compute_time(node, k)
+        assert marg <= full
+        act = max(node.bytes_accessed - min(node.param_bytes, node.bytes_accessed), 0.0)
+        expect = max(
+            node.flops / (dev.peak_flops * cm._eff(node.op_type)),
+            act / dev.hbm_bw,
+        ) * float(cm.device_scale[k])
+        assert marg == pytest.approx(expect)
+    # the scaled-chunk helper composes scale_node_to_tokens with it
+    t = fused_prefill_compute_time(cm, node, 0, 64, 256)
+    assert t == pytest.approx(
+        cm.marginal_compute_time(scale_node_to_tokens(node, 64, 256), 0)
+    )
+    assert t < prefill_compute_time(cm, node, 0, 64, 256)
+
+
+def test_fused_prefill_busy_marginal_devices_comm_unchanged():
+    """fused_prefill=True shrinks the per-device prefill busy sums (no
+    weight re-stream per chunk) and leaves every channel's busy untouched
+    (activations still cross stage boundaries)."""
+    g = _block_graph()
+    cl = inter_server_cluster()
+    cm = CostModel(cl)
+    pl = {nid: i % cl.k for i, nid in enumerate(g.topo_order())}
+    kw = dict(prompt_len=512, prefill_chunk=64)
+    b_fused = prefill_busy(g, pl, cm, fused_prefill=True, **kw)
+    b_std = prefill_busy(g, pl, cm, fused_prefill=False, **kw)
+    assert set(b_fused) == set(b_std)
+    for key in b_std:
+        if key[0] == "dev":
+            assert b_fused[key] < b_std[key]
+        else:
+            assert b_fused[key] == pytest.approx(b_std[key])
+    assert bottleneck_time(
+        g, pl, cm, fused_prefill=True, **kw
+    ) <= bottleneck_time(g, pl, cm, fused_prefill=False, **kw)
+
+
+def test_plan_scores_what_the_engine_runs():
+    """PlanConfig.fused_prefill=True (the default) makes the planner's
+    throughput objective the fused-aware bottleneck of its own placement —
+    the same serving path the engine picks off the same plan config."""
+    cfg = get_config("llama3.2-1b").smoke()
+    g = transformer_graph(cfg, seq_len=64, granularity="block")
+    cl = tpu_slice_cluster(n_slices=2, heterogeneous=True)
+    cm = CostModel(cl)
+    pc = PlanConfig(
+        method="moirai", objective="throughput", time_limit=10,
+        mip_rel_gap=0.05, prompt_len=2048, prefill_chunk=64,
+    )
+    assert pc.fused_prefill is True
+    res = plan(g, cl, pc)
+    b_fused = bottleneck_time(
+        g, res.placement, cm, prompt_len=2048, prefill_chunk=64,
+        graph_seq_len=64, fused_prefill=True,
+    )
+    assert res.objective == pytest.approx(b_fused, rel=1e-6)
+    # fused scoring is strictly below the standalone-chunk scoring of the
+    # SAME placement (2048 prompt tokens re-stream a lot of weights)
+    assert b_fused < bottleneck_time(
+        g, res.placement, cm, prompt_len=2048, prefill_chunk=64,
+        graph_seq_len=64, fused_prefill=False,
+    )
+
+
+def test_milp_fused_prefill_flag():
+    """solve_placement(fused_prefill=True) accumulates prefill busy at the
+    marginal rate: its optimal throughput objective can only improve."""
+    from repro.core.milp import solve_placement
+
+    cfg = get_config("llama3.2-1b").smoke()
+    g = transformer_graph(cfg, seq_len=64, granularity="block")
+    cl = tpu_slice_cluster(n_slices=2, heterogeneous=True)
+    cm = CostModel(cl)
+    kw = dict(
+        objective="throughput", prompt_len=1024, prefill_chunk=64,
+        graph_seq_len=64, time_limit=10, mip_rel_gap=1e-3,
+    )
+    r_fused = solve_placement(g, cm, fused_prefill=True, **kw)
+    r_std = solve_placement(g, cm, fused_prefill=False, **kw)
+    assert r_fused.status in ("optimal", "feasible")
+    assert r_std.status in ("optimal", "feasible")
+    assert r_fused.objective <= r_std.objective * (1 + 1e-6)
+    # each objective is the matching-rate bottleneck of its own placement
+    assert r_fused.objective == pytest.approx(
+        bottleneck_time(g, r_fused.placement, cm, prompt_len=1024,
+                        prefill_chunk=64, graph_seq_len=64,
+                        fused_prefill=True),
+        rel=1e-6,
+    )
