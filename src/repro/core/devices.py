@@ -166,6 +166,30 @@ class ClusterSpec:
             name=f"{self.name}-dev{idx}",
         )
 
+    def subcluster(self, indices) -> "ClusterSpec":
+        """Cluster restricted to ``indices`` (replica-partitioning support).
+
+        Devices are re-indexed in the given order; the link bandwidth and
+        latency submatrices between the kept devices are preserved, so a
+        placement solved on the subcluster prices communication exactly as
+        the full cluster would between those devices.
+        """
+        idx = list(indices)
+        if not idx:
+            raise ValueError("subcluster needs at least one device index")
+        if len(set(idx)) != len(idx):
+            raise ValueError(f"duplicate device indices: {idx}")
+        for i in idx:
+            if not 0 <= i < self.k:
+                raise ValueError(f"device index {i} out of range 0..{self.k - 1}")
+        tag = ",".join(str(i) for i in idx)
+        return ClusterSpec(
+            devices=[self.devices[i] for i in idx],
+            link_bw=self.link_bw[np.ix_(idx, idx)],
+            link_latency=self.link_latency[np.ix_(idx, idx)],
+            name=f"{self.name}[{tag}]",
+        )
+
 
 # --------------------------------------------------------------------------
 # Presets

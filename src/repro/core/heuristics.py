@@ -28,9 +28,10 @@ All heuristics return a ``PlacementResult`` whose ``objective`` is their own
 internal schedule estimate; benchmarks re-evaluate every method through the
 same event simulator for fairness.  Every heuristic accepts
 ``serving_slots``: memory feasibility charges each op ``param_bytes +
-serving_slots × kv_bytes`` (Eq. 5's KV-aware resident cost), and ``getf``
-additionally accepts ``objective="throughput"`` to run its group-restricted
-search under the bottleneck-stage criterion instead of earliest finish.
+serving_slots × kv_bytes`` (Eq. 5's KV-aware resident cost), and ``getf`` /
+``msct`` additionally accept ``objective="throughput"`` to run their
+group-restricted / favorite-child searches under the bottleneck-stage
+criterion instead of earliest finish.
 """
 
 from __future__ import annotations
@@ -250,11 +251,28 @@ def getf(
     )
 
 
-def msct(graph: OpGraph, cost: CostModel, *, serving_slots: int = 1) -> PlacementResult:
+def msct(
+    graph: OpGraph,
+    cost: CostModel,
+    *,
+    objective: str = "latency",
+    serving_slots: int = 1,
+) -> PlacementResult:
     """m-SCT: favorite child = the most *critical* successor (largest
     bottom-level, i.e. longest remaining path to a sink) — co-locating it
     saves its input communication on the critical path, per Hanen–Munier SCT
-    as used in Baechi."""
+    as used in Baechi.
+
+    ``objective="throughput"`` keeps the favorite-child preference but swaps
+    the earliest-finish candidate rule for the bottleneck-stage criterion
+    (same scorer as ``bottleneck_balance``/``getf[throughput]``): the
+    favorite breaks ties among equal-bottleneck choices, so the baseline
+    optimizes the quantity the throughput MILP optimizes while retaining
+    SCT's communication-avoiding structure (ROADMAP follow-on)."""
+    if objective not in ("latency", "throughput"):
+        raise ValueError(
+            f"objective must be latency|throughput, got {objective!r}"
+        )
     K = cost.cluster.k
     mean_t = {
         nid: float(np.mean([cost.compute_time(n, k) for k in range(K)]))
@@ -268,6 +286,24 @@ def msct(graph: OpGraph, cost: CostModel, *, serving_slots: int = 1) -> Placemen
     for nid, node in graph.nodes.items():
         if node.outputs:
             favorite[nid] = max(node.outputs, key=lambda s: (bottom[s], -s))
+    if objective == "throughput":
+        bkey, bcommit, objective_fn = _bottleneck_scorer(graph, cost)
+        last_on_dev: Dict[int, int] = {}  # device -> last scheduled op
+
+        def key(nid: int, k: int, s: float, f: float):
+            peak, f_, nid_, k_ = bkey(nid, k, s, f)
+            fav = favorite.get(last_on_dev.get(k, -1)) == nid
+            return (peak, not fav, f_, nid_, k_)
+
+        def commit(nid: int, k: int):
+            bcommit(nid, k)
+            last_on_dev[k] = nid
+
+        return _greedy_list_schedule(
+            graph, cost, name="m-sct[throughput]",
+            candidate_key=key, on_commit=commit, objective_fn=objective_fn,
+            serving_slots=serving_slots,
+        )
     return _greedy_list_schedule(
         graph, cost, favorite=favorite, name="m-sct", serving_slots=serving_slots
     )

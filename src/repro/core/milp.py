@@ -208,15 +208,18 @@ def solve_placement(
 
         pct = fused_prefill_compute_time if fused_prefill else prefill_compute_time
         s_graph = resolve_graph_seq_len(graph, graph_seq_len)
-        # chunk sizes repeat (all but the last are equal) — cost each
-        # distinct size once and multiply, like simulate.prefill_busy
-        counts: Dict[int, int] = {}
+        # chunks are costed as (size, KV-context) pairs — chunk i attends
+        # over every prior chunk's cache plus itself — matching
+        # simulate.prefill_busy's iteration exactly (objective parity)
+        counts: Dict[Tuple[int, int], int] = {}
+        run = 0
         for toks in prefill_chunk_sizes(int(prompt_len), prefill_chunk):
-            counts[toks] = counts.get(toks, 0) + 1
-        for toks, n in counts.items():
+            run += toks
+            counts[(toks, run)] = counts.get((toks, run), 0) + 1
+        for (toks, ctx), n in counts.items():
             for o in ops:
                 p_pre[o] = p_pre[o] + n * np.array([
-                    pct(cost, graph.nodes[o], k, toks, s_graph)
+                    pct(cost, graph.nodes[o], k, toks, s_graph, ctx)
                     for k in range(K)
                 ])
             frac = float(toks) / float(s_graph)

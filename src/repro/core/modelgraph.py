@@ -47,7 +47,10 @@ def _elt(g, op, x_in, elems, dtype=BF16, extra_inputs=(), params=0.0):
         op,
         inputs=[x_in, *extra_inputs] if x_in is not None else list(extra_inputs),
         flops=elems * 2.0,
-        bytes_accessed=elems * dtype * (2 + len(extra_inputs)),
+        # params (norm gains etc.) are streamed with the activations — kept
+        # inside bytes_accessed so token rescaling's invariant-weight share
+        # (min(param_bytes, bytes_accessed)) is a true subset of the traffic
+        bytes_accessed=elems * dtype * (2 + len(extra_inputs)) + params,
         param_bytes=params,
         output_bytes=elems * dtype,
     )
@@ -83,7 +86,11 @@ def transformer_graph(
 
     if granularity in ("layer", "block"):
         for i in range(cfg.n_layers):
-            attn_flops = 2.0 * s * d * (h * hd + 2 * kv * hd) + 4.0 * s * s * h * hd + 2.0 * s * h * hd * d
+            # the 4·s²·h·hd score/context term is quadratic in the attended
+            # span; recorded in meta so token rescaling (chunked prefill
+            # costing) can bill it queries × keys instead of linearly
+            attn_quad = 4.0 * s * s * h * hd
+            attn_flops = 2.0 * s * d * (h * hd + 2 * kv * hd) + attn_quad + 2.0 * s * h * hd * d
             attn_params = (d * (h + 2 * kv) * hd + h * hd * d) * BF16
             a = g.add(
                 "attention",
@@ -93,6 +100,7 @@ def transformer_graph(
                 param_bytes=attn_params,
                 kv_bytes=layer_kv_bytes,
                 output_bytes=elems * BF16,
+                meta={"quad_flops": attn_quad},
             )
             if cfg.n_experts:
                 e_act = cfg.top_k
@@ -118,6 +126,7 @@ def transformer_graph(
                     param_bytes=attn_params + ff_params,
                     kv_bytes=layer_kv_bytes,
                     output_bytes=elems * BF16,
+                    meta={"quad_flops": attn_quad},
                 )
             else:
                 f = g.add(
@@ -136,6 +145,9 @@ def transformer_graph(
             bytes_accessed=(s * d + d * cfg.vocab_size) * BF16,
             param_bytes=0.0 if cfg.tie_embeddings else d * cfg.vocab_size * BF16,
             output_bytes=s * cfg.vocab_size * BF16,
+            # streamed once per pass whether or not the table is tied (tied
+            # ⇒ param_bytes 0); token rescaling must not shrink it
+            meta={"invariant_bytes": d * cfg.vocab_size * BF16},
         )
         g.validate()
         return g
@@ -150,21 +162,33 @@ def transformer_graph(
         v = _matmul(g, f"L{i}.wv", ln1, s, d, kv * hd, kv_bytes=layer_kv_bytes / 2)
         qr = _elt(g, "rope", q, s * h * hd)
         kr = _elt(g, "rope", k, s * kv * hd)
+        # score/context matmuls and the mask/softmax between them are
+        # quadratic in the attended span — meta records each node's
+        # quadratic flops/bytes share so token rescaling bills them
+        # queries × keys (scale_node_to_tokens)
         scores = g.add(
             "matmul",  # q·kᵀ
             inputs=[qr, kr],
             flops=2.0 * s * s * h * hd,
             bytes_accessed=(2 * s * h * hd + s * s * h) * BF16,
             output_bytes=s * s * h * BF16,
+            meta={"quad_flops": 2.0 * s * s * h * hd,
+                  "quad_bytes": s * s * h * BF16},
         )
         msk = _elt(g, "mask", scores, s * s * h)
         sm = _elt(g, "softmax", msk, s * s * h)
+        for _q in (msk, sm):   # elementwise over the s×s score matrix
+            g.nodes[_q].meta.update(
+                quad_flops=g.nodes[_q].flops, quad_bytes=g.nodes[_q].bytes_accessed
+            )
         ctx = g.add(
             "matmul",  # probs·V
             inputs=[sm, v],
             flops=2.0 * s * s * h * hd,
             bytes_accessed=(s * s * h + 2 * s * h * hd) * BF16,
             output_bytes=s * h * hd * BF16,
+            meta={"quad_flops": 2.0 * s * s * h * hd,
+                  "quad_bytes": s * s * h * BF16},
         )
         wo = _matmul(g, f"L{i}.wo", ctx, s, h * hd, d)
         res1 = _elt(g, "add", wo, elems, extra_inputs=(x,))

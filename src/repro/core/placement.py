@@ -121,6 +121,13 @@ class PlanConfig:
         Policy-gradient iterations for the ``"placeto"`` baseline.
     seed:
         RNG seed for stochastic planners (placeto).
+    replicas / slo_p99 / slo_rate / max_replicas:
+        Replica-partitioning knobs consumed by
+        :func:`repro.core.replica.plan_replicas` (re-exported here):
+        replica count (``"auto"`` or a fixed int), the p99 latency SLO and
+        the offered load it is checked at, and the auto-mode search cap.
+        :func:`plan` itself ignores them, so the single-pipeline path is
+        bit-identical to the pre-replica planner.
     """
 
     method: str = "moirai"           # moirai|etf|getf|msct|bottleneck_balance|placeto|round_robin|single
@@ -157,6 +164,22 @@ class PlanConfig:
     pair_budget: int = 2500          # max non-overlap binaries for exact MILP
     placeto_iters: int = 150
     seed: int = 0
+    # ---- replica partitioning (read by core.replica.plan_replicas ONLY;
+    # plan() itself ignores these, so single-pipeline planning is untouched)
+    # "auto" = search replica counts 1..max_replicas jointly with per-replica
+    # device subsets; an int pins the replica count (1 = today's single
+    # pipeline, bit-identical)
+    replicas: object = 1             # int | "auto"
+    # p99 end-to-end request latency SLO in seconds, scored per replica by
+    # simulate_pipeline under the Poisson offered load; None = no SLO (pick
+    # the highest-throughput partition unconditionally)
+    slo_p99: Optional[float] = None
+    # offered load (req/s) the SLO is evaluated at; None derives it as 80%
+    # of the candidate service plan's aggregate steady capacity
+    slo_rate: Optional[float] = None
+    # cap on the replica count searched in "auto" mode; None = min(device
+    # count, how many copies of the model's resident bytes the cluster fits)
+    max_replicas: Optional[int] = None
 
 
 def plan(
@@ -230,10 +253,10 @@ def plan(
 
     # the heuristic candidate pool (closed over the slot count so memory
     # feasibility is KV-aware); the throughput objective adds the
-    # bottleneck-balancing scheduler and switches GETF to its
-    # bottleneck-criterion mode (the others all chase earliest finish)
+    # bottleneck-balancing scheduler and switches GETF and m-SCT to their
+    # bottleneck-criterion modes (ETF keeps chasing earliest finish)
     def _h_msct(g_):
-        return msct(g_, cost, serving_slots=slots)
+        return msct(g_, cost, objective=cfg.objective, serving_slots=slots)
 
     def _h_etf(g_):
         return etf(g_, cost, serving_slots=slots)
@@ -465,3 +488,8 @@ METHODS = (
     "round_robin",
     "single",
 )
+
+
+# service-level replica partitioning rides on plan(): imported last because
+# core.replica itself imports PlanConfig/plan from this module
+from .replica import ReplicaSpec, ServicePlan, plan_replicas  # noqa: E402,F401

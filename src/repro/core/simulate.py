@@ -157,24 +157,57 @@ def resolve_graph_seq_len(graph: OpGraph, seq_len: Optional[int]) -> int:
     return int(s)
 
 
-def scale_node_to_tokens(node: OpNode, tokens: int, seq_len: int) -> OpNode:
+def scale_node_to_tokens(
+    node: OpNode,
+    tokens: int,
+    seq_len: int,
+    *,
+    context_tokens: Optional[int] = None,
+) -> OpNode:
     """A copy of ``node`` rescaled from ``seq_len`` tokens to ``tokens``.
 
     Flops, activation HBM traffic, and the output payload scale with the
     token count; resident weight traffic (``param_bytes``, streamed once per
-    pass regardless of chunk size) does not.  Attention's quadratic score
-    term is approximated linearly — the same fidelity the rest of the
-    roofline model runs at."""
+    pass regardless of chunk size) does not.
+
+    Attention's score/context work is quadratic in the attended span, not
+    linear in the query count: the model-graph builders record each node's
+    quadratic share as ``meta["quad_flops"]`` / ``meta["quad_bytes"]``, and
+    that share scales as ``(tokens/seq_len) × (context_tokens/seq_len)`` —
+    queries × keys — instead of linearly.  ``context_tokens`` is the KV span
+    the chunk attends over (its own tokens plus every token already in the
+    cache); the default ``None`` means a standalone pass (context = its own
+    tokens), which makes a whole-prompt pass at ``tokens = t`` exactly equal
+    a graph natively built at ``seq_len = t``.  Nodes without quad metadata
+    (coarsened supernodes that fused attention away, non-attention ops)
+    fall back to the old linear approximation."""
     frac = float(tokens) / float(seq_len)
+    cfrac = float(context_tokens if context_tokens is not None else tokens) / float(seq_len)
     serial = node.meta.get("serial") if node.meta else None
     scaled = node.copy()
-    scaled.flops = node.flops * frac
-    inv = min(node.param_bytes, node.bytes_accessed)
-    scaled.bytes_accessed = inv + max(node.bytes_accessed - inv, 0.0) * frac
+    meta = node.meta or {}
+    quad_f = min(float(meta.get("quad_flops", 0.0)), node.flops)
+    scaled.flops = (node.flops - quad_f) * frac + quad_f * frac * cfrac
+    # the invariant weight stream only exists when the node actually streams
+    # its weights alongside activations (bytes > params); a gather-style node
+    # (embedding: touched rows ≪ resident table, bytes <= params) reads
+    # token-indexed bytes that scale with the chunk.  meta["invariant_bytes"]
+    # overrides the param-based inference — a tied lm_head streams the shared
+    # vocab table every pass despite carrying param_bytes = 0
+    if "invariant_bytes" in meta:
+        inv = min(float(meta["invariant_bytes"]), node.bytes_accessed)
+    elif node.bytes_accessed > node.param_bytes:
+        inv = min(node.param_bytes, node.bytes_accessed)
+    else:
+        inv = 0.0
+    act = max(node.bytes_accessed - inv, 0.0)
+    quad_b = min(float(meta.get("quad_bytes", 0.0)), act)
+    scaled.bytes_accessed = inv + (act - quad_b) * frac + quad_b * frac * cfrac
     scaled.output_bytes = node.output_bytes * frac
     if serial:
         # hierarchy supernodes carry (flops, bytes, op_type) member triples
-        # with no per-member weight split: scale both terms linearly
+        # with no per-member weight or quad split: scale both terms linearly
+        # (the documented fallback fidelity once coarsening discards meta)
         scaled.meta = dict(node.meta)
         scaled.meta["serial"] = [
             (f * frac, nb * frac, ot) for f, nb, ot in serial
@@ -183,25 +216,42 @@ def scale_node_to_tokens(node: OpNode, tokens: int, seq_len: int) -> OpNode:
 
 
 def prefill_compute_time(
-    cost: CostModel, node: OpNode, device_idx: int, tokens: int, seq_len: int
+    cost: CostModel,
+    node: OpNode,
+    device_idx: int,
+    tokens: int,
+    seq_len: int,
+    context_tokens: Optional[int] = None,
 ) -> float:
     """p_ik of one ``tokens``-token prefill chunk of ``node`` (batch-1: the
-    serving engine prefills one slot row at a time)."""
+    serving engine prefills one slot row at a time).  ``context_tokens`` is
+    the KV span the chunk attends over (cache + itself) — attention's
+    quadratic share is billed queries × keys (see
+    :func:`scale_node_to_tokens`)."""
     return cost.compute_time(
-        scale_node_to_tokens(node, tokens, seq_len), device_idx
+        scale_node_to_tokens(node, tokens, seq_len, context_tokens=context_tokens),
+        device_idx,
     )
 
 
 def fused_prefill_compute_time(
-    cost: CostModel, node: OpNode, device_idx: int, tokens: int, seq_len: int
+    cost: CostModel,
+    node: OpNode,
+    device_idx: int,
+    tokens: int,
+    seq_len: int,
+    context_tokens: Optional[int] = None,
 ) -> float:
     """p_ik of a ``tokens``-token prefill chunk when the chunk rides INSIDE
     the decode batch's fused forward (the engine's one-program-per-step
     path): the weight stream and kernel launch are already charged to the
     decode pass sharing the program, so only the chunk's marginal activation
-    work is billed (see ``CostModel.marginal_compute_time``)."""
+    work is billed (see ``CostModel.marginal_compute_time``).
+    ``context_tokens`` bills attention's quadratic share at the chunk's true
+    KV span, as in :func:`prefill_compute_time`."""
     return cost.marginal_compute_time(
-        scale_node_to_tokens(node, tokens, seq_len), device_idx
+        scale_node_to_tokens(node, tokens, seq_len, context_tokens=context_tokens),
+        device_idx,
     )
 
 
@@ -233,10 +283,12 @@ def _prefill_task_table(
     tokens: int,
     seq_len: int,
     fused_prefill: bool = False,
+    context_tokens: Optional[int] = None,
 ) -> Tuple[Dict[int, float], Dict[int, Tuple]]:
     """(dur, resource) of one ``tokens``-token prefill pass of the placed
     graph — same task ids, deps and resources as the decode pass
-    (``_task_table``), durations rescaled to the chunk's token count.
+    (``_task_table``), durations rescaled to the chunk's token count (and
+    its ``context_tokens`` KV span for attention's quadratic share).
     ``fused_prefill`` bills devices at the marginal (fused mixed-batch)
     rate; comm payloads are unchanged — activations cross stage boundaries
     whether or not the chunk shares a program with decode rows."""
@@ -245,7 +297,7 @@ def _prefill_task_table(
     resource: Dict[int, Tuple] = {}
     for nid, node in graph.nodes.items():
         k = placement[nid]
-        dur[nid] = pct(cost, node, k, tokens, seq_len)
+        dur[nid] = pct(cost, node, k, tokens, seq_len, context_tokens)
         resource[nid] = ("dev", k)
     frac = float(tokens) / float(seq_len)
     for q, c in aug.comm.items():
@@ -283,17 +335,21 @@ def prefill_busy(
         return busy
     s = resolve_graph_seq_len(graph, seq_len)
     aug = aug or augment(graph)
-    # chunk sizes repeat (all but the last are equal) — cost each distinct
-    # size once
-    counts: Dict[int, int] = {}
+    # chunks are costed as (size, KV-context) pairs: chunk i attends over
+    # every prior chunk's cache plus itself, so attention's quadratic share
+    # grows along the prompt (identical pair iteration in the MILP's busy
+    # accumulators — keep in sync with core.milp)
+    counts: Dict[Tuple[int, int], int] = {}
+    run = 0
     for t in chunks:
-        counts[t] = counts.get(t, 0) + 1
+        run += t
+        counts[(t, run)] = counts.get((t, run), 0) + 1
     pct = fused_prefill_compute_time if fused_prefill else prefill_compute_time
-    for t, n in counts.items():
+    for (t, ctx), n in counts.items():
         for nid, node in graph.nodes.items():
             k = placement[nid]
             key = ("dev", k)
-            busy[key] = busy.get(key, 0.0) + n * pct(cost, node, k, t, s)
+            busy[key] = busy.get(key, 0.0) + n * pct(cost, node, k, t, s, ctx)
         frac = float(t) / float(s)
         for q, c in aug.comm.items():
             ks, kd = placement[c.src], placement[c.dst]
@@ -661,19 +717,34 @@ def simulate_pipeline(
     # running chunk r+1).
     prompt_lens = _resolve_prompt_lens(n_requests, prompt_len)
     chunks_of = [prefill_chunk_sizes(p, prefill_chunk) for p in prompt_lens]
-    pre_tables: Dict[int, Tuple[Dict[int, float], Dict[int, Tuple]]] = {}
+    # chunk r of a request attends over every prior chunk's KV plus itself,
+    # so tables are keyed (size, context) — attention's quadratic share
+    # grows along the prompt (see scale_node_to_tokens)
+    ctx_of = []
+    for ch in chunks_of:
+        run, ctxs = 0, []
+        for t in ch:
+            run += t
+            ctxs.append(run)
+        ctx_of.append(ctxs)
+    pre_tables: Dict[Tuple[int, int], Tuple[Dict[int, float], Dict[int, Tuple]]] = {}
     if any(chunks_of):
         s_graph = resolve_graph_seq_len(graph, graph_seq_len)
-        for toks in {t for ch in chunks_of for t in ch}:
-            pre_tables[toks] = _prefill_task_table(
+        pairs = {
+            (t, c)
+            for ch, cx in zip(chunks_of, ctx_of)
+            for t, c in zip(ch, cx)
+        }
+        for toks, ctx in pairs:
+            pre_tables[(toks, ctx)] = _prefill_task_table(
                 graph, placement, cost, aug, toks, s_graph,
-                fused_prefill=fused_prefill,
+                fused_prefill=fused_prefill, context_tokens=ctx,
             )
     n_rounds = [len(ch) + 1 for ch in chunks_of]   # prefill rounds + decode
 
     def round_tables(rid: int, r: int) -> Tuple[Dict[int, float], Dict[int, Tuple]]:
         if r < len(chunks_of[rid]):
-            return pre_tables[chunks_of[rid][r]]
+            return pre_tables[(chunks_of[rid][r], ctx_of[rid][r])]
         return dur, resource
 
     def sched_key(rid: int, r: int, task: int):

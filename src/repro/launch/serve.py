@@ -8,6 +8,15 @@ The engine runs with the adaptive observe → derate → replan loop closed
 it).  After the run the CLI prints the straggler report, every adaptation
 decision the policy logged, and every committed replan (hot-swap) with its
 derate map — the operator-facing view of the loop.
+
+``--replicas auto|N`` switches to the multi-replica service: the replica
+planner (:func:`repro.core.replica.plan_replicas`) jointly picks the
+replica count and per-replica device subsets, and an SLO-aware router
+(:class:`repro.serving.router.Router`) dispatches requests across the
+per-replica engines.  ``--replicas 1`` (the default) is the single-engine
+path above, verbatim.  With replicas the CLI additionally prints the
+service plan, the router's event log (submits, dispatches, drains, replica
+spawns) and the per-tier latency report.
 """
 
 from __future__ import annotations
@@ -23,6 +32,75 @@ from repro.core.placement import PlanConfig
 from repro.models.model import build_model
 from repro.serving.adaptation import AdaptationConfig
 from repro.serving.engine import Request, ServingEngine
+
+
+def _serve_replicas(args, cfg, params, cluster, plan_cfg):
+    """The --replicas path: plan the service, run the router, print the
+    operator view (service plan, event log, per-tier latencies)."""
+    import dataclasses
+
+    from repro.core.modelgraph import transformer_graph
+    from repro.core.replica import plan_replicas
+    from repro.serving.router import Router, RouterConfig
+
+    # the replica planner must score the SAME graph the engines execute
+    graph = transformer_graph(cfg, seq_len=args.max_len, granularity="block")
+    plan_cfg = dataclasses.replace(
+        plan_cfg,
+        replicas="auto" if args.replicas == "auto" else int(args.replicas),
+        slo_p99=args.slo_p99,
+    )
+    t0 = time.perf_counter()
+    svc = plan_replicas(graph, cluster, plan_cfg)
+    t_plan = time.perf_counter() - t0
+    print(
+        f"[serve] service plan ({t_plan:.1f}s): {svc.n_replicas} replica(s) "
+        f"on {cluster.name}, total {svc.total_rps:.1f} req/s steady, "
+        f"p99 {svc.p99_s*1e3:.1f} ms @ {svc.extra['offered_rps']:.1f} req/s "
+        f"offered, slo_ok={svc.slo_ok}"
+    )
+    for i, spec in enumerate(svc.replicas):
+        print(
+            f"[serve]   replica{i}: devices={spec.devices} "
+            f"bneck={spec.bottleneck_s*1e3:.2f} ms "
+            f"({spec.throughput_rps:.1f} req/s)"
+        )
+    router = Router.from_service_plan(
+        cfg, params, cluster, svc,
+        slots=args.slots, max_len=args.max_len, plan_cfg=plan_cfg,
+        config=RouterConfig(dispatch=args.dispatch),
+        eos_id=-1,
+        admission=args.admission, batching=args.batching,
+        oversize=args.oversize,
+    )
+    t0 = time.perf_counter()
+    reqs = [
+        Request(rid=i, prompt=[1 + i % 7, 2, 3, 4],
+                max_new_tokens=args.max_new_tokens)
+        for i in range(args.requests)
+    ]
+    n_tiers = router.config.tiers
+    for i, r in enumerate(reqs):
+        router.submit(r, tier=i % n_tiers)   # spread load over the tiers
+    router.run_until_drained()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out_tokens) for r in reqs)
+    print(f"[serve] {toks} tokens in {dt:.2f}s ({toks/dt:.1f} tok/s) "
+          f"across {sum(r.state != 'retired' for r in router.replicas)} "
+          "live replica(s)")
+    for t, row in router.latency_report().items():
+        print(
+            f"[serve]   tier {t}: {int(row['count'])} done, "
+            f"mean {row['mean_steps']:.1f} / max {int(row['max_steps'])} "
+            "router steps"
+        )
+    print(f"[router] {len(router.events)} events")
+    for ev in router.events:
+        detail = " ".join(
+            f"{k_}={v_}" for k_, v_ in ev.items()
+            if k_ not in ("step", "kind")
+        )
+        print(f"[router]   s{ev['step']:<4d} {ev['kind']:<14s} {detail}")
 
 
 def main(argv=None):
@@ -78,6 +156,28 @@ def main(argv=None):
         help="persist the adaptive derate policy's state here; a restarted "
         "engine resumes its learned derates instead of re-observing",
     )
+    ap.add_argument(
+        "--replicas", default="1", metavar="auto|N",
+        help="serve N model replicas behind the SLO-aware router, or 'auto' "
+        "to let the replica planner pick the count that maximizes total "
+        "steady req/s under --slo-p99 (default 1 = single engine, no router)",
+    )
+    ap.add_argument(
+        "--slo-p99", type=float, default=None, metavar="SECONDS",
+        help="p99 request-latency SLO the replica planner's simulation must "
+        "meet (only with --replicas; no SLO = pure throughput maximization)",
+    )
+    ap.add_argument(
+        "--dispatch", choices=("least_loaded", "shortest_prefill"),
+        default="least_loaded",
+        help="router dispatch policy across replicas (only with --replicas)",
+    )
+    ap.add_argument(
+        "--cluster-size", type=int, default=None, metavar="K",
+        help="devices in the modeled cluster (default: number of visible "
+        "accelerators; raise it to plan multi-replica services on clusters "
+        "bigger than this host)",
+    )
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -85,22 +185,27 @@ def main(argv=None):
         cfg = cfg.smoke()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    k = args.cluster_size or max(len(jax.devices()), 1)
     cluster = tpu_slice_cluster(
-        n_slices=max(len(jax.devices()), 1), heterogeneous=args.heterogeneous
+        n_slices=k, heterogeneous=args.heterogeneous
     )
+    plan_cfg = PlanConfig(
+        method=args.method, time_limit=20, mip_rel_gap=0.05,
+        # mirror the engine's own default: serving >1 slot is a
+        # pipelined workload, scored by bottleneck-stage time — and
+        # prefill-aware scoring (--prompt-len) only exists there
+        objective="throughput" if args.slots > 1 else "latency",
+        serving_slots=args.slots,
+        prefill_chunk=args.prefill_chunk or None,
+        prompt_len=args.prompt_len,
+        fused_prefill=args.fused_prefill,
+    )
+    if args.replicas != "1":
+        return _serve_replicas(args, cfg, params, cluster, plan_cfg)
     engine = ServingEngine(
         cfg, params, cluster,
         slots=args.slots, max_len=args.max_len,
-        plan_cfg=PlanConfig(
-            method=args.method, time_limit=20, mip_rel_gap=0.05,
-            # mirror the engine's own default: serving >1 slot is a
-            # pipelined workload, scored by bottleneck-stage time — and
-            # prefill-aware scoring (--prompt-len) only exists there
-            objective="throughput" if args.slots > 1 else "latency",
-            prefill_chunk=args.prefill_chunk or None,
-            prompt_len=args.prompt_len,
-            fused_prefill=args.fused_prefill,
-        ),
+        plan_cfg=plan_cfg,
         eos_id=-1,
         # short windows can't carry the default 4-sample evidence minimum —
         # scale it down so --adapt-every 1..3 still observes (and acts)

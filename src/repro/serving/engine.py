@@ -88,6 +88,7 @@ from repro.configs.base import ModelConfig
 from repro.core.costmodel import CostModel, DerateCalibrator
 from repro.core.devices import ClusterSpec
 from repro.core.modelgraph import transformer_graph
+from repro.core.milp import PlacementResult
 from repro.core.placement import PlanConfig, plan, replan
 from .adaptation import AdaptationConfig, AdaptationEvent, DeratePolicy
 from .stage_executor import StageExecutor, stages_from_placement, stats_from_times
@@ -115,6 +116,10 @@ class Request:
     done: bool = False
     rejected: bool = False
     truncated: bool = False
+    # flips on first admission to a slot: a draining engine keeps serving
+    # started requests (including hot-swap re-queues) but hands
+    # never-started ones back to the caller (see ServingEngine.drain)
+    started: bool = False
 
 
 class ServingEngine:
@@ -167,6 +172,11 @@ class ServingEngine:
             immediately with ``rejected=True``.  Without this check an
             oversized prompt silently clamps/corrupts the slot's cache row
             (``_maybe_retire``'s capacity check only fires post-hoc).
+        placement_result: a pre-solved :class:`PlacementResult` to serve
+            (e.g. one replica of a :func:`repro.core.replica.plan_replicas`
+            service plan, remapped to THIS engine's cluster indices) —
+            skips the engine-startup ``plan()`` call entirely.  Must cover
+            exactly this engine's block graph at ``max_len``.
     """
 
     # sentinel: "take prefill_chunk from the plan config"
@@ -190,6 +200,7 @@ class ServingEngine:
         prefill_chunk: Any = _FROM_PLAN,
         fused: Any = _FROM_PLAN,
         oversize: str = "truncate",
+        placement_result: Optional[PlacementResult] = None,
     ):
         self.cfg = cfg
         self.params = params
@@ -267,7 +278,18 @@ class ServingEngine:
 
         self.graph = transformer_graph(cfg, seq_len=max_len, granularity="block")
         self._cost = CostModel(self.cluster_effective)
-        if self.derate:
+        if placement_result is not None:
+            # a pre-solved plan (the router hands each replica its slice of
+            # the service plan, in THIS engine's cluster indices) — must
+            # cover the same block graph this engine builds at max_len
+            if set(placement_result.placement) != set(self.graph.nodes):
+                raise ValueError(
+                    "placement_result does not cover this engine's graph "
+                    f"({len(placement_result.placement)} placed ops vs "
+                    f"{len(self.graph.nodes)} nodes at max_len={max_len})"
+                )
+            self.placement_result = placement_result
+        elif self.derate:
             self.placement_result = replan(
                 self.graph, cluster, (), self.plan_cfg, derate=self.derate
             )
@@ -276,6 +298,10 @@ class ServingEngine:
         self._build_executor(self.placement_result.placement)
 
         self.queue: List[Request] = []
+        # drain mode: no NEW request may start — submit() refuses, _admit
+        # only re-admits started (hot-swap re-queued) work — while in-flight
+        # requests run to completion (see begin_drain/drain)
+        self.draining = False
         # recent terminal requests (bounded — a long-lived engine must not
         # retain every historical request's token lists forever)
         self.finished: Deque[Request] = deque(maxlen=4096)
@@ -365,6 +391,10 @@ class ServingEngine:
         check only fires after the damage).  Per the ``oversize`` policy the
         request is either truncated (oldest prompt tokens dropped, flagged
         ``truncated=True``) or rejected outright."""
+        if self.draining:
+            raise RuntimeError(
+                "engine is draining: new requests must go to another replica"
+            )
         budget = self.max_len - int(req.max_new_tokens)
         if len(req.prompt) > budget:
             if self.oversize == "reject" or budget < 1:
@@ -394,9 +424,25 @@ class ServingEngine:
         compare on the decode path.)"""
         return n_in_flight <= max(self._max_in_flight, 0)
 
+    def _next_queue_idx(self) -> Optional[int]:
+        """Queue index of the next admissible request: the head normally;
+        while draining, the first STARTED request (a hot-swap re-queue whose
+        accepted work must finish) — never-started requests wait for
+        ``begin_drain`` to hand them back."""
+        if not self.queue:
+            return None
+        if not self.draining:
+            return 0
+        for i, r in enumerate(self.queue):
+            if r.started:
+                return i
+        return None
+
     def _admit(self):
         for slot in range(self.slots):
-            if self.active[slot] is None and self.queue:
+            qi = self._next_queue_idx()
+            if self.active[slot] is None and qi is not None:
+                head = self.queue[qi]
                 n_active = sum(r is not None for r in self.active)
                 if self.batching == "lockstep":
                     # lockstep cohort check (legacy baseline): batched decode
@@ -414,7 +460,7 @@ class ServingEngine:
                         for i, r in enumerate(self.active)
                         if r is not None
                     }
-                    depth = len(self.queue[0].prompt) + len(self.queue[0].out_tokens)
+                    depth = len(head.prompt) + len(head.out_tokens)
                     if pos_set and pos_set != {depth}:
                         break
                 if n_active > 0 and not self._admission_ok(n_active + 1):
@@ -425,14 +471,15 @@ class ServingEngine:
                     # A request with generated tokens was ALREADY admitted
                     # once (re-queued by a hot-swap) — never reject it, or
                     # accepted half-served work would be silently discarded
-                    if self.admission == "reject" and not self.queue[0].out_tokens:
-                        req = self.queue.pop(0)
+                    if self.admission == "reject" and not head.out_tokens:
+                        req = self.queue.pop(qi)
                         req.rejected = True
                         req.done = True
                         self._record_finished(req)
                         continue
                     break  # "queue": retry when a slot's KV frees
-                req = self.queue.pop(0)
+                req = self.queue.pop(qi)
+                req.started = True
                 self.active[slot] = req
                 # prompt + out_tokens so a request re-queued by a hot-swap
                 # resumes its greedy decode exactly where it was
@@ -772,6 +819,72 @@ class ServingEngine:
         return sink
 
     # ------------------------------------------------------------------
+    # drain: stop admission, finish in-flight work, free the devices
+    # ------------------------------------------------------------------
+    def begin_drain(self) -> List[Request]:
+        """Enter drain mode without blocking: ``submit`` starts refusing,
+        never-started queued requests are removed and RETURNED (the caller —
+        typically the router — re-dispatches them to healthy replicas), and
+        in-flight work keeps stepping to completion.  Hot-swap/replan paths
+        stay fully functional while draining: ``_requeue_active`` re-queues
+        started requests and ``_admit`` re-admits exactly those."""
+        self.draining = True
+        handed = [r for r in self.queue if not r.started]
+        if handed:
+            self.queue = [r for r in self.queue if r.started]
+        return handed
+
+    def drain(self, max_steps: int = 10_000) -> Dict[str, Any]:
+        """Blocking drain: :meth:`begin_drain`, then step until in-flight
+        work completes.  Returns::
+
+            {"handed_back":   never-started requests for re-dispatch,
+             "finished":      requests that completed during the drain,
+             "freed_devices": surviving ORIGINAL cluster device indices now
+                              free for a service-level replan,
+             "drained":       True when nothing is left in flight}
+        """
+        handed = self.begin_drain()
+        finished = self.run_until_drained(max_steps=max_steps)
+        freed = [
+            i for i in range(self.cluster.k) if i not in self.failed_devices
+        ]
+        drained = not self.queue and all(r is None for r in self.active)
+        return {
+            "handed_back": handed,
+            "finished": finished,
+            "freed_devices": freed,
+            "drained": drained,
+        }
+
+    def health(self) -> float:
+        """Fraction of the replica's NOMINAL peak flops still effective:
+        ``Σ surviving peak × derate ÷ Σ nominal peak``.  1.0 = pristine;
+        failures and accumulated derates pull it down.  The router drains a
+        replica whose health sinks below its floor."""
+        total = sum(d.peak_flops for d in self.cluster.devices)
+        if total <= 0:
+            return 0.0
+        alive = sum(
+            d.peak_flops * self.derate.get(i, 1.0)
+            for i, d in enumerate(self.cluster.devices)
+            if i not in self.failed_devices
+        )
+        return alive / total
+
+    def pending_prefill_tokens(self) -> int:
+        """Prompt tokens queued ahead of a new arrival: unfinished prefill
+        of in-flight slots plus every queued request's prompt + resume
+        tokens.  The router's shortest-expected-prefill dispatch ranks
+        replicas by this."""
+        pend = 0
+        for slot, toks in self._prefill_toks.items():
+            pend += max(len(toks) - self._prefill_done.get(slot, 0), 0)
+        for r in self.queue:
+            pend += len(r.prompt) + len(r.out_tokens)
+        return pend
+
+    # ------------------------------------------------------------------
     # fault tolerance / elasticity
     # ------------------------------------------------------------------
     def _requeue_active(self):
@@ -1019,7 +1132,11 @@ class ServingEngine:
         (batch-1 — the chunk forward runs a single slot's row), from the
         same cost model the decode predictions use: each stage node is
         rescaled to the chunk's token count relative to the graph's build
-        seq_len (``core.simulate.scale_node_to_tokens``).  Feeds the
+        seq_len (``core.simulate.scale_node_to_tokens``).  The prediction
+        anchors attention's quadratic share at a chunk-local KV context
+        (one prediction serves every chunk of the prompt; late chunks
+        attending a longer cache show up as obs/pred ratio > 1 in the
+        report, which is the point of surfacing them).  Feeds the
         ``straggler_report``'s prefill section so prompt work is visible,
         without ever entering the derate calibrator."""
         from repro.core.simulate import prefill_compute_time

@@ -1,0 +1,462 @@
+"""SLO-aware front-end router over per-replica serving engines.
+
+The service layer the replica planner (:mod:`repro.core.replica`) plans
+for: N :class:`~repro.serving.engine.ServingEngine` replicas, each owning a
+disjoint device subset, behind one router that
+
+* owns **priority-tiered admission queues** — tier 0 drains strictly before
+  tier 1 before tier 2 (interactive > standard > batch); within a tier,
+  FIFO.  Dispatch only hands a request to a replica with free capacity, so
+  under contention the tiers are meaningful: a batch request never takes
+  the slot an interactive one is waiting for;
+* **dispatches** by ``least_loaded`` (fewest in-flight + queued requests
+  per unit of replica capacity) or ``shortest_prefill`` (fewest pending
+  prompt tokens ahead of the new arrival — the better policy under mixed
+  prompt lengths, since a short question should not queue behind a
+  book-length context on the loaded replica);
+* **streams tokens back**: each submitted request may carry an
+  ``on_token(req, tok)`` callback, invoked for every newly generated token
+  at the router step that observed it;
+* keeps **per-replica adaptation** running (each engine's own observe →
+  derate → replan loop is untouched) and watches each replica's
+  :meth:`~repro.serving.engine.ServingEngine.health`: a replica derated or
+  failure-shrunk below ``RouterConfig.health_floor`` is **drained** —
+  admission stops, never-started queued work returns to the front of its
+  tiers for re-dispatch, in-flight requests finish — and once idle its
+  surviving devices (in ORIGINAL cluster indices) re-enter the router's
+  device pool, triggering a **service-level replan**: if the pool's healthy
+  devices can host a replica, ``engine_factory`` spawns one and it joins
+  the active set.
+
+Replica lifecycle::
+
+    active ──(health < floor)──► draining ──(idle)──► retired
+      ▲                                                  │ devices → pool
+      └────────── engine_factory(healthy pool) ◄─────────┘
+
+Every transition lands in :attr:`Router.events` (bounded), the operator
+view surfaced by ``launch/serve.py --replicas``.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, replace
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+from repro.serving.engine import Request, ServingEngine
+
+
+@dataclass
+class RouterConfig:
+    """Router knobs: tier count, dispatch policy, replica health floor,
+    whether a finished drain triggers a pool replan, per-replica backlog
+    (queued-beyond-slots) allowance, drain step budget, and the event-log
+    bound."""
+
+    tiers: int = 3
+    dispatch: str = "least_loaded"       # least_loaded | shortest_prefill
+    health_floor: float = 0.5
+    replan_on_drain: bool = True
+    # requests a replica may hold QUEUED beyond its free slots; 0 = hand a
+    # replica work only when it has a slot open (strictest priority: the
+    # router's tiers stay authoritative, not the replicas' FIFO queues)
+    backlog: int = 0
+    drain_max_steps: int = 10_000
+    event_log_keep: int = 4096
+
+    def __post_init__(self):
+        if self.dispatch not in ("least_loaded", "shortest_prefill"):
+            raise ValueError(
+                f"dispatch must be least_loaded|shortest_prefill, got {self.dispatch!r}"
+            )
+        if self.tiers < 1:
+            raise ValueError(f"tiers must be >= 1, got {self.tiers}")
+
+
+@dataclass
+class Replica:
+    """One serving engine behind the router: its name, the ORIGINAL cluster
+    device indices it owns, lifecycle state, and its dispatch weight
+    (planned steady req/s, used to normalize load scores so a half-speed
+    replica is not handed half the traffic of a full-speed one)."""
+
+    name: str
+    devices: List[int]
+    engine: ServingEngine
+    state: str = "active"                # active | draining | retired
+    weight: float = 1.0
+
+    def in_flight(self) -> int:
+        return sum(r is not None for r in self.engine.active) + len(
+            self.engine.queue
+        )
+
+    def capacity(self, backlog: int) -> int:
+        return (self.engine.slots + backlog) - self.in_flight()
+
+    def idle(self) -> bool:
+        return self.in_flight() == 0
+
+
+@dataclass
+class _Record:
+    """Router-side bookkeeping for one submitted request."""
+
+    req: Request
+    tier: int
+    on_token: Optional[Callable[[Request, int], None]] = None
+    streamed: int = 0
+    submitted_step: int = 0
+    dispatched_step: Optional[int] = None
+    done_step: Optional[int] = None
+    replica: Optional[str] = None
+
+
+class Router:
+    """Front-end over per-replica engines — see module docstring.
+
+    Args:
+        replicas: :class:`Replica` instances, or ``(engine, devices)``
+            pairs (devices = ORIGINAL cluster indices the engine owns).
+        config: :class:`RouterConfig` (default: 3 tiers, least-loaded).
+        engine_factory: ``f(devices: List[int]) -> ServingEngine`` used to
+            spawn a replacement replica from pooled devices after a drain;
+            ``None`` disables service-level replanning (drained devices
+            just accumulate in :attr:`device_pool`).
+    """
+
+    def __init__(
+        self,
+        replicas: Sequence[Any],
+        *,
+        config: Optional[RouterConfig] = None,
+        engine_factory: Optional[Callable[[List[int]], ServingEngine]] = None,
+    ):
+        self.config = config or RouterConfig()
+        self.engine_factory = engine_factory
+        self.replicas: List[Replica] = []
+        for i, r in enumerate(replicas):
+            if isinstance(r, Replica):
+                self.replicas.append(r)
+            else:
+                eng, devs = r
+                self.replicas.append(
+                    Replica(name=f"replica{i}", devices=list(devs), engine=eng)
+                )
+        if not self.replicas:
+            raise ValueError("router needs at least one replica")
+        names = [r.name for r in self.replicas]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate replica names: {names}")
+        self._next_replica_id = len(self.replicas)
+        self.tiers: List[Deque[_Record]] = [
+            deque() for _ in range(self.config.tiers)
+        ]
+        self._records: Dict[int, _Record] = {}          # id(req) -> record
+        self._replica_recs: Dict[str, List[_Record]] = {
+            r.name: [] for r in self.replicas
+        }
+        self.device_pool: List[int] = []
+        self.pool_derate: Dict[int, float] = {}
+        self.events: List[Dict[str, Any]] = []
+        self.finished: List[Request] = []
+        self.step_count = 0
+
+    # ------------------------------------------------------------------
+    def _log(self, kind: str, **kw):
+        if len(self.events) >= self.config.event_log_keep:
+            del self.events[: self.config.event_log_keep // 2]
+        self.events.append({"step": self.step_count, "kind": kind, **kw})
+
+    # ------------------------------------------------------------------
+    def submit(
+        self,
+        req: Request,
+        *,
+        tier: Optional[int] = None,
+        on_token: Optional[Callable[[Request, int], None]] = None,
+    ):
+        """Enqueue ``req`` into a priority tier (default: the LOWEST tier —
+        callers opt IN to priority with ``tier=0``).  ``on_token`` streams
+        each newly generated token back as the router observes it."""
+        t = self.config.tiers - 1 if tier is None else int(tier)
+        if not 0 <= t < self.config.tiers:
+            raise ValueError(f"tier {t} outside 0..{self.config.tiers - 1}")
+        rec = _Record(
+            req=req, tier=t, on_token=on_token, submitted_step=self.step_count
+        )
+        self._records[id(req)] = rec
+        self.tiers[t].append(rec)
+        self._log("submit", rid=req.rid, tier=t)
+
+    # ------------------------------------------------------------------
+    # dispatch
+    # ------------------------------------------------------------------
+    def _score(self, rep: Replica) -> Tuple[float, str]:
+        w = max(rep.weight, 1e-12)
+        if self.config.dispatch == "shortest_prefill":
+            load = rep.engine.pending_prefill_tokens() / w
+        else:
+            load = rep.in_flight() / w
+        return (load, rep.name)           # name tie-break: deterministic
+
+    def _dispatch(self):
+        """Strict-priority dispatch: drain tier 0 first, FIFO within a
+        tier, and only into replicas with free capacity — when every
+        replica is full, NOBODY dispatches, so a lower tier can never
+        overtake a starved higher one."""
+        active = [r for r in self.replicas if r.state == "active"]
+        for tier, q in enumerate(self.tiers):
+            while q:
+                ready = [
+                    r for r in active if r.capacity(self.config.backlog) > 0
+                ]
+                if not ready:
+                    return                # saturated: preserve tier order
+                rec = q.popleft()
+                best = min(ready, key=self._score)
+                rec.dispatched_step = self.step_count
+                rec.replica = best.name
+                self._replica_recs[best.name].append(rec)
+                best.engine.submit(rec.req)
+                self._log(
+                    "dispatch", rid=rec.req.rid, tier=tier,
+                    replica=best.name, policy=self.config.dispatch,
+                )
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+    def _begin_drain(self, rep: Replica, reason: str):
+        rep.state = "draining"
+        handed = rep.engine.begin_drain()
+        # handed-back work was ACCEPTED by the service: it re-enters the
+        # FRONT of its tier (before never-dispatched peers), keeping order
+        for req in reversed(handed):
+            rec = self._records.get(id(req))
+            if rec is None:               # submitted directly to the engine
+                rec = _Record(req=req, tier=self.config.tiers - 1)
+                self._records[id(req)] = rec
+            rec.replica = None
+            rec.dispatched_step = None
+            self.tiers[rec.tier].appendleft(rec)
+        handed_ids = {id(q) for q in handed}
+        if self._replica_recs.get(rep.name):
+            self._replica_recs[rep.name] = [
+                r for r in self._replica_recs[rep.name]
+                if id(r.req) not in handed_ids
+            ]
+        self._log(
+            "drain_begin", replica=rep.name, reason=reason,
+            handed_back=len(handed), health=rep.engine.health(),
+        )
+
+    def _finish_drain(self, rep: Replica):
+        rep.state = "retired"
+        eng = rep.engine
+        # map the engine's subcluster-local indices back to ORIGINAL ids
+        failed = {rep.devices[i] for i in eng.failed_devices}
+        freed = [d for d in rep.devices if d not in failed]
+        for local, factor in eng.derate.items():
+            self.pool_derate[rep.devices[local]] = factor
+        self.device_pool.extend(freed)
+        self._log(
+            "drain_complete", replica=rep.name, freed_devices=freed,
+            lost_devices=sorted(failed), pool=list(self.device_pool),
+        )
+        if self.config.replan_on_drain:
+            self._replan_pool()
+
+    def _replan_pool(self):
+        """Service-level replan: if the pool's healthy devices can host a
+        replica, spawn one via ``engine_factory`` and put it in rotation."""
+        healthy = [
+            d for d in self.device_pool
+            if self.pool_derate.get(d, 1.0) >= self.config.health_floor
+        ]
+        if not healthy or self.engine_factory is None:
+            self._log(
+                "replan_skipped",
+                healthy_pool=healthy,
+                has_factory=self.engine_factory is not None,
+            )
+            return
+        try:
+            engine = self.engine_factory(sorted(healthy))
+        except Exception as e:  # pool can't host a replica (e.g. memory)
+            self._log("replan_failed", error=str(e), pool=healthy)
+            return
+        name = f"replica{self._next_replica_id}"
+        self._next_replica_id += 1
+        weight = sum(
+            engine.cluster.devices[j].peak_flops
+            * self.pool_derate.get(d, 1.0)
+            for j, d in enumerate(sorted(healthy))
+        )
+        rep = Replica(
+            name=name, devices=sorted(healthy), engine=engine, weight=weight
+        )
+        self.replicas.append(rep)
+        self._replica_recs[name] = []
+        self.device_pool = [d for d in self.device_pool if d not in healthy]
+        self._log("replica_spawn", replica=name, devices=rep.devices)
+
+    # ------------------------------------------------------------------
+    # stepping
+    # ------------------------------------------------------------------
+    def _stream(self, rep: Replica):
+        recs = self._replica_recs.get(rep.name, [])
+        still: List[_Record] = []
+        for rec in recs:
+            out = rec.req.out_tokens
+            while rec.streamed < len(out):
+                tok = out[rec.streamed]
+                rec.streamed += 1
+                if rec.on_token is not None:
+                    rec.on_token(rec.req, tok)
+            if rec.req.done:
+                rec.done_step = self.step_count
+                self.finished.append(rec.req)
+                self._log(
+                    "finish", rid=rec.req.rid, tier=rec.tier,
+                    replica=rep.name, rejected=rec.req.rejected,
+                    steps=rec.done_step - rec.submitted_step,
+                )
+            else:
+                still.append(rec)
+        self._replica_recs[rep.name] = still
+
+    def step(self) -> int:
+        """One router tick: dispatch, step every live replica, stream new
+        tokens, finish drains (devices → pool → replan), health-check.
+        Returns the number of requests still in flight or queued."""
+        self.step_count += 1
+        self._dispatch()
+        for rep in self.replicas:
+            if rep.state == "retired":
+                continue
+            rep.engine.step()
+            self._stream(rep)
+        for rep in self.replicas:
+            if rep.state == "draining" and rep.idle():
+                self._finish_drain(rep)
+        for rep in self.replicas:
+            if rep.state == "active":
+                h = rep.engine.health()
+                if h < self.config.health_floor:
+                    self._begin_drain(
+                        rep, reason=f"health {h:.3f} < floor "
+                        f"{self.config.health_floor}",
+                    )
+        return self.pending()
+
+    def pending(self) -> int:
+        """Requests queued at the router or in flight on any replica."""
+        return sum(len(q) for q in self.tiers) + sum(
+            len(recs) for recs in self._replica_recs.values()
+        )
+
+    def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
+        """Step until no request is queued or in flight (or ``max_steps``);
+        returns every request finished during this call."""
+        n0 = len(self.finished)
+        for _ in range(max_steps):
+            if self.step() == 0:
+                break
+        return self.finished[n0:]
+
+    # ------------------------------------------------------------------
+    # reporting
+    # ------------------------------------------------------------------
+    def latency_report(self) -> Dict[int, Dict[str, float]]:
+        """Per-tier router-step latency (submit → done) of finished
+        requests: count, mean, max — the contention view that shows tier 0
+        skipping ahead of tier 2."""
+        by_tier: Dict[int, List[int]] = {}
+        for rec in self._records.values():
+            if rec.done_step is not None:
+                by_tier.setdefault(rec.tier, []).append(
+                    rec.done_step - rec.submitted_step
+                )
+        return {
+            t: {
+                "count": float(len(v)),
+                "mean_steps": sum(v) / len(v),
+                "max_steps": float(max(v)),
+            }
+            for t, v in sorted(by_tier.items())
+        }
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_service_plan(
+        cls,
+        cfg,
+        params,
+        cluster,
+        service_plan,
+        *,
+        slots: int = 4,
+        max_len: int = 256,
+        plan_cfg=None,
+        config: Optional[RouterConfig] = None,
+        devices: Optional[List[Any]] = None,
+        **engine_kwargs,
+    ) -> "Router":
+        """Build one engine per :class:`~repro.core.replica.ReplicaSpec`.
+
+        Each replica engine runs on ``cluster.subcluster(spec.devices)``
+        with the service plan's pre-solved placement (mapped back to
+        subcluster-local indices) — no re-planning at engine startup.  A
+        single-replica plan over the full device set uses the ORIGINAL
+        cluster object and placement result, so the engine is bit-identical
+        to constructing ``ServingEngine`` directly.  The returned router's
+        ``engine_factory`` re-plans from scratch on pooled devices (their
+        pre-solved plan died with the drained replica)."""
+        import jax
+
+        jdev = devices if devices is not None else jax.devices()
+        full_set = list(range(cluster.k))
+        replicas: List[Replica] = []
+        for i, spec in enumerate(service_plan.replicas):
+            g = list(spec.devices)
+            if g == full_set:
+                sub, local = cluster, spec.result
+            else:
+                sub = cluster.subcluster(g)
+                pos = {d: j for j, d in enumerate(g)}
+                local = replace(
+                    spec.result,
+                    placement={
+                        nid: pos[k] for nid, k in spec.result.placement.items()
+                    },
+                    channels={
+                        q: (pos[a], pos[b])
+                        for q, (a, b) in spec.result.channels.items()
+                    },
+                )
+            engine = ServingEngine(
+                cfg, params, sub,
+                devices=[jdev[d % len(jdev)] for d in g],
+                slots=slots, max_len=max_len, plan_cfg=plan_cfg,
+                placement_result=local, **engine_kwargs,
+            )
+            replicas.append(
+                Replica(
+                    name=f"replica{i}", devices=g, engine=engine,
+                    weight=spec.throughput_rps
+                    if spec.throughput_rps > 0
+                    else 1.0,
+                )
+            )
+
+        def factory(devs: List[int]) -> ServingEngine:
+            return ServingEngine(
+                cfg, params, cluster.subcluster(devs),
+                devices=[jdev[d % len(jdev)] for d in devs],
+                slots=slots, max_len=max_len, plan_cfg=plan_cfg,
+                **engine_kwargs,
+            )
+
+        return cls(replicas, config=config, engine_factory=factory)

@@ -1,0 +1,218 @@
+"""Replica-partitioned service planning (core/replica.py) + subcluster and
+throughput-mode m-SCT support it rides on."""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.costmodel import CostModel
+from repro.core.devices import (
+    TPU_ICI_BW,
+    TPU_V5E_HBM_BW,
+    TPU_V5E_HBM_BYTES,
+    TPU_V5E_PEAK_BF16,
+    ClusterSpec,
+    DeviceSpec,
+    tpu_slice_cluster,
+)
+from repro.core.heuristics import msct
+from repro.core.modelgraph import transformer_graph
+from repro.core.placement import PlanConfig, plan, plan_replicas
+from repro.core.simulate import bottleneck_time
+
+
+@pytest.fixture(scope="module")
+def smoke_graph():
+    cfg = get_config("llama3.2-1b").smoke()
+    return transformer_graph(cfg, seq_len=64, granularity="block")
+
+
+def two_island(n_per: int = 2, thin_bw: float = 2e9) -> ClusterSpec:
+    """Two ICI islands (full-speed / half-speed) bridged by one thin link."""
+    k = 2 * n_per
+    devices = []
+    for i in range(k):
+        sp = 1.0 if i < n_per else 0.5
+        devices.append(
+            DeviceSpec(
+                f"isl{i // n_per}/s{i % n_per}",
+                peak_flops=TPU_V5E_PEAK_BF16 * sp,
+                mem_bytes=TPU_V5E_HBM_BYTES * 4,
+                hbm_bw=TPU_V5E_HBM_BW * sp,
+                kind="tpu_slice",
+            )
+        )
+    bw = np.zeros((k, k))
+    for base in (0, n_per):
+        for s in range(n_per):
+            t = base + (s + 1) % n_per
+            if t != base + s:
+                bw[base + s, t] = bw[t, base + s] = TPU_ICI_BW
+    bw[0, n_per] = bw[n_per, 0] = thin_bw
+    lat = np.full((k, k), 1e-6)
+    np.fill_diagonal(lat, 0.0)
+    return ClusterSpec(devices, bw, lat, name=f"two-island-{k}")
+
+
+# ---------------------------------------------------------------------------
+# ClusterSpec.subcluster
+# ---------------------------------------------------------------------------
+
+
+def test_subcluster_reindexes_and_preserves_links():
+    cl = tpu_slice_cluster(n_slices=4, heterogeneous=True)
+    sub = cl.subcluster([1, 3])
+    assert sub.k == 2
+    assert [d.name for d in sub.devices] == ["slice1", "slice3"]
+    # link submatrix preserved: sub[0,1] is the original 1<->3 direct link
+    assert sub.link_bw[0, 1] == cl.link_bw[1, 3]
+    assert sub.link_latency[1, 0] == cl.link_latency[3, 1]
+    assert "[1,3]" in sub.name
+    # original untouched
+    assert cl.k == 4
+
+
+def test_subcluster_effective_bw_cannot_route_through_dropped_devices():
+    # ring 0-1-2-3: without device 1 and 3, 0<->2 has NO path in the subcluster
+    cl = tpu_slice_cluster(n_slices=4)
+    sub = cl.subcluster([0, 2])
+    assert cl.effective_bw(0, 2) > 0
+    assert sub.effective_bw(0, 1) == 0.0
+    assert not sub.is_connected()
+
+
+def test_subcluster_validates_indices():
+    cl = tpu_slice_cluster(n_slices=2)
+    with pytest.raises(ValueError):
+        cl.subcluster([])
+    with pytest.raises(ValueError):
+        cl.subcluster([0, 0])
+    with pytest.raises(ValueError):
+        cl.subcluster([0, 2])
+
+
+# ---------------------------------------------------------------------------
+# throughput-mode m-SCT (ISSUE 7 satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_msct_throughput_objective_is_bottleneck_time(smoke_graph):
+    cl = tpu_slice_cluster(n_slices=3, heterogeneous=True)
+    cm = CostModel(cl)
+    res = msct(smoke_graph, cm, objective="throughput", serving_slots=4)
+    assert res.method == "m-sct[throughput]"
+    b = bottleneck_time(smoke_graph, res.placement, cm, decode_batch=1)
+    assert res.objective == pytest.approx(b, rel=1e-9)
+
+
+def test_msct_throughput_no_worse_than_latency_mode_bottleneck(smoke_graph):
+    cl = tpu_slice_cluster(n_slices=3, heterogeneous=True)
+    cm = CostModel(cl)
+    r_thr = msct(smoke_graph, cm, objective="throughput")
+    r_lat = msct(smoke_graph, cm, objective="latency")
+    b_thr = bottleneck_time(smoke_graph, r_thr.placement, cm)
+    b_lat = bottleneck_time(smoke_graph, r_lat.placement, cm)
+    assert b_thr <= b_lat * 1.0 + 1e-12
+
+
+def test_msct_rejects_unknown_objective(smoke_graph):
+    cm = CostModel(tpu_slice_cluster(n_slices=2))
+    with pytest.raises(ValueError):
+        msct(smoke_graph, cm, objective="makespan")
+
+
+# ---------------------------------------------------------------------------
+# plan_replicas
+# ---------------------------------------------------------------------------
+
+
+def test_single_replica_is_bit_identical_to_plan(smoke_graph):
+    cl = tpu_slice_cluster(n_slices=3, heterogeneous=True)
+    cfg = PlanConfig(method="etf", objective="throughput", serving_slots=2)
+    svc = plan_replicas(smoke_graph, cl, cfg, replicas=1)
+    direct = plan(smoke_graph, cl, cfg)
+    assert svc.n_replicas == 1
+    spec = svc.replicas[0]
+    assert spec.devices == list(range(cl.k))
+    assert spec.result.placement == direct.placement
+    assert spec.result.method == direct.method
+    assert spec.result.objective == direct.objective
+    # the full-set replica is NOT marked as a subcluster remap
+    assert "subcluster" not in spec.result.extra
+
+
+def test_auto_partitions_two_islands(smoke_graph):
+    cl = two_island(n_per=2)
+    cfg = PlanConfig(method="etf", objective="throughput", serving_slots=2)
+    svc = plan_replicas(smoke_graph, cl, cfg, replicas="auto")
+    assert svc.n_replicas >= 2
+    # device subsets are disjoint and speak ORIGINAL cluster indices
+    seen = set()
+    for spec in svc.replicas:
+        assert not (seen & set(spec.devices))
+        seen |= set(spec.devices)
+        assert set(spec.result.placement.values()) <= set(spec.devices)
+        for a, b in spec.result.channels.values():
+            assert a in spec.devices and b in spec.devices
+    assert seen <= set(range(cl.k))
+    # splitting must beat the one-wide-pipeline candidate it also scored
+    one_wide = [
+        c for c in svc.extra["candidates"] if len(c["groups"]) == 1
+    ]
+    assert one_wide and svc.total_rps >= one_wide[0]["total_rps"]
+
+
+def test_fixed_replica_count_and_validation(smoke_graph):
+    cl = two_island(n_per=2)
+    cfg = PlanConfig(method="etf", serving_slots=2)
+    svc = plan_replicas(smoke_graph, cl, cfg, replicas=2)
+    assert svc.n_replicas == 2
+    with pytest.raises(ValueError):
+        plan_replicas(smoke_graph, cl, cfg, replicas=0)
+    with pytest.raises(ValueError):
+        plan_replicas(smoke_graph, cl, cfg, replicas=cl.k + 1)
+
+
+def test_unmeetable_slo_is_reported_not_hidden(smoke_graph):
+    cl = tpu_slice_cluster(n_slices=2)
+    cfg = PlanConfig(method="etf", serving_slots=2)
+    svc = plan_replicas(smoke_graph, cl, cfg, replicas="auto", slo_p99=1e-12)
+    assert not svc.slo_ok
+    assert svc.p99_s > 1e-12
+    # an SLO that any plan meets is ok
+    svc2 = plan_replicas(smoke_graph, cl, cfg, replicas="auto", slo_p99=1e6)
+    assert svc2.slo_ok
+
+
+def test_memory_caps_replica_count(smoke_graph):
+    # devices too small to each hold a model copy: r=k is infeasible, and
+    # the planner must say so rather than return an overcommitted plan
+    cl = tpu_slice_cluster(n_slices=2)
+    tiny = ClusterSpec(
+        devices=[
+            DeviceSpec(d.name, d.peak_flops, mem_bytes=1.0, hbm_bw=d.hbm_bw)
+            for d in cl.devices
+        ],
+        link_bw=cl.link_bw.copy(),
+        link_latency=cl.link_latency.copy(),
+        name="tiny",
+    )
+    with pytest.raises(ValueError, match="fits the model"):
+        plan_replicas(
+            smoke_graph, tiny, PlanConfig(method="etf"), replicas=2
+        )
+
+
+@pytest.mark.slow
+def test_single_replica_bit_identical_under_milp(smoke_graph):
+    """The MILP path (envelope + solver) through plan_replicas(replicas=1)
+    returns plan()'s exact placement — seeds and budgets are forwarded."""
+    cl = tpu_slice_cluster(n_slices=3, heterogeneous=True)
+    cfg = PlanConfig(
+        method="moirai", objective="throughput", serving_slots=2,
+        time_limit=10, mip_rel_gap=0.05,
+    )
+    svc = plan_replicas(smoke_graph, cl, cfg, replicas=1)
+    direct = plan(smoke_graph, cl, cfg)
+    assert svc.replicas[0].result.placement == direct.placement
+    assert svc.replicas[0].result.objective == pytest.approx(direct.objective)

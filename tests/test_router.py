@@ -1,0 +1,325 @@
+"""SLO-aware front-end router over per-replica serving engines
+(serving/router.py) plus the engine drain machinery it drives."""
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core.devices import tpu_slice_cluster
+from repro.core.placement import PlanConfig, plan_replicas
+from repro.core.modelgraph import transformer_graph
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.router import Replica, Router, RouterConfig
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    from repro.models.model import build_model
+
+    cfg = get_config("llama3.2-1b").smoke()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engine(cfg, params, cluster, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("plan_cfg", PlanConfig(method="etf"))
+    kw.setdefault("eos_id", -1)
+    return ServingEngine(cfg, params, cluster, **kw)
+
+
+def _two_replica_router(cfg, params, **router_kw):
+    """Two single-device replicas over a 2-device cluster, plus a factory
+    that rebuilds an engine from pooled ORIGINAL device indices."""
+    cluster = tpu_slice_cluster(n_slices=2)
+
+    def factory(devs):
+        return _engine(cfg, params, cluster.subcluster(devs))
+
+    reps = [
+        Replica(name=f"replica{i}", devices=[i],
+                engine=factory([i]))
+        for i in range(2)
+    ]
+    return Router(reps, engine_factory=factory, **router_kw), cluster
+
+
+# ---------------------------------------------------------------------------
+# engine drain unit (ISSUE 7 satellite c)
+# ---------------------------------------------------------------------------
+
+
+def test_engine_drain_hands_back_unstarted_work(small_model):
+    cfg, params = small_model
+    eng = _engine(cfg, params, tpu_slice_cluster(n_slices=1), slots=1)
+    first = Request(rid=0, prompt=[1, 2], max_new_tokens=3)
+    second = Request(rid=1, prompt=[3, 4], max_new_tokens=3)
+    eng.submit(first)
+    eng.submit(second)
+    eng.step()                       # admits (starts) only the first
+    assert first.started and not second.started
+    handed = eng.begin_drain()
+    assert handed == [second]
+    with pytest.raises(RuntimeError, match="draining"):
+        eng.submit(Request(rid=2, prompt=[5], max_new_tokens=1))
+    out = eng.drain()
+    assert out["drained"] and out["handed_back"] == []
+    assert first in out["finished"] and len(first.out_tokens) == 3
+    assert out["freed_devices"] == [0]
+    assert not second.done           # untouched: the router re-dispatches it
+
+
+def test_engine_hot_swap_while_draining_still_finishes(small_model):
+    """A replan mid-drain re-queues STARTED requests; drain-mode admission
+    must re-admit exactly those (never-started work stays excluded)."""
+    cfg, params = small_model
+    eng = _engine(cfg, params, tpu_slice_cluster(n_slices=1), slots=1)
+    a = Request(rid=0, prompt=[1, 2], max_new_tokens=4)
+    eng.submit(a)
+    eng.step()
+    assert a.started
+    eng.begin_drain()
+    eng._replan_and_rebuild("test hot-swap during drain")
+    assert eng.queue == [a]          # re-queued, still marked started
+    out = eng.drain()
+    assert a in out["finished"] and len(a.out_tokens) == 4
+
+
+def test_engine_health_reflects_derate_and_failure(small_model):
+    cfg, params = small_model
+    eng = _engine(cfg, params, tpu_slice_cluster(n_slices=2))
+    assert eng.health() == pytest.approx(1.0)
+    eng.derate = {0: 0.5}
+    assert eng.health() == pytest.approx(0.75)
+    eng.failed_devices.append(1)
+    assert eng.health() == pytest.approx(0.25)
+
+
+# ---------------------------------------------------------------------------
+# router dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_priority_tiers_dispatch_in_order_under_contention(small_model):
+    cfg, params = small_model
+    cluster = tpu_slice_cluster(n_slices=1)
+    rep = Replica(name="replica0", devices=[0],
+                  engine=_engine(cfg, params, cluster, slots=1))
+    router = Router([rep], config=RouterConfig(tiers=3, backlog=0))
+    # submitted WORST tier first — dispatch must invert to tier order
+    for tier, rid in ((2, 0), (1, 1), (0, 2)):
+        router.submit(Request(rid=rid, prompt=[1 + rid], max_new_tokens=2),
+                      tier=tier)
+    done = router.run_until_drained()
+    assert len(done) == 3
+    order = [e["rid"] for e in router.events if e["kind"] == "dispatch"]
+    assert order == [2, 1, 0]
+    rpt = router.latency_report()
+    assert rpt[0]["mean_steps"] < rpt[1]["mean_steps"] < rpt[2]["mean_steps"]
+
+
+def test_default_tier_is_lowest_priority(small_model):
+    cfg, params = small_model
+    router, _ = _two_replica_router(cfg, params)
+    r = Request(rid=0, prompt=[1], max_new_tokens=1)
+    router.submit(r)
+    assert len(router.tiers[-1]) == 1
+    with pytest.raises(ValueError):
+        router.submit(Request(rid=1, prompt=[2], max_new_tokens=1), tier=9)
+
+
+def test_least_loaded_spreads_across_replicas(small_model):
+    cfg, params = small_model
+    router, _ = _two_replica_router(cfg, params)
+    reqs = [Request(rid=i, prompt=[1 + i], max_new_tokens=2)
+            for i in range(4)]
+    for r in reqs:
+        router.submit(r)
+    router.run_until_drained()
+    assert all(r.done for r in reqs)
+    by_rep = {}
+    for e in router.events:
+        if e["kind"] == "dispatch":
+            by_rep.setdefault(e["replica"], []).append(e["rid"])
+    # 2 slots per replica, 4 requests: least-loaded alternates 2/2
+    assert sorted(len(v) for v in by_rep.values()) == [2, 2]
+
+
+def test_shortest_prefill_dispatch_avoids_prompt_heavy_replica(small_model):
+    cfg, params = small_model
+    router, _ = _two_replica_router(
+        cfg, params, config=RouterConfig(dispatch="shortest_prefill")
+    )
+    # preload BOTH engines with one request each (equal in-flight counts):
+    # replica0 carries a long prompt, replica1 a short one
+    router.replicas[0].engine.submit(
+        Request(rid=90, prompt=list(range(1, 41)), max_new_tokens=1))
+    router.replicas[1].engine.submit(
+        Request(rid=91, prompt=[1, 2], max_new_tokens=1))
+    p0 = router.replicas[0].engine.pending_prefill_tokens()
+    p1 = router.replicas[1].engine.pending_prefill_tokens()
+    assert p0 > p1
+    router.submit(Request(rid=0, prompt=[3], max_new_tokens=1))
+    router.step()
+    ev = [e for e in router.events if e["kind"] == "dispatch"][-1]
+    assert ev["replica"] == "replica1"   # least_loaded would tie-break to 0
+    assert ev["policy"] == "shortest_prefill"
+
+
+# ---------------------------------------------------------------------------
+# drain → device pool → service replan, end to end
+# ---------------------------------------------------------------------------
+
+
+def test_unhealthy_replica_drains_and_pool_replan_spawns_replacement(
+    small_model,
+):
+    cfg, params = small_model
+    router, _ = _two_replica_router(cfg, params)
+    reqs = [Request(rid=i, prompt=[1 + i], max_new_tokens=2)
+            for i in range(4)]
+    for r in reqs:
+        router.submit(r)
+    # replica0's own adaptation loop has derated its device below the floor
+    router.replicas[0].engine.derate = {0: 0.2}
+    router.run_until_drained()
+    assert all(r.done for r in reqs)     # handed-back work was re-dispatched
+    kinds = [e["kind"] for e in router.events]
+    assert "drain_begin" in kinds and "drain_complete" in kinds
+    rep0 = router.replicas[0]
+    assert rep0.state == "retired"
+    # device 0 went to the pool but is too unhealthy to host a replica
+    assert router.device_pool == [0]
+    assert router.pool_derate == {0: 0.2}
+    assert "replan_skipped" in kinds
+    # the device recovers (operator swaps it): replan now spawns a replica
+    router.pool_derate.clear()
+    router._replan_pool()
+    assert [e["kind"] for e in router.events][-1] == "replica_spawn"
+    spawned = router.replicas[-1]
+    assert spawned.devices == [0] and spawned.state == "active"
+    assert router.device_pool == []
+    late = Request(rid=99, prompt=[7], max_new_tokens=2)
+    router.submit(late)
+    router.run_until_drained()
+    assert late.done
+
+
+def test_drain_requeues_handed_back_work_at_tier_front(small_model):
+    cfg, params = small_model
+    cluster = tpu_slice_cluster(n_slices=1)
+    rep = Replica(name="replica0", devices=[0],
+                  engine=_engine(cfg, params, cluster, slots=1))
+    router = Router([rep], config=RouterConfig(tiers=1))
+    a = Request(rid=0, prompt=[1], max_new_tokens=4)
+    b = Request(rid=1, prompt=[2], max_new_tokens=4)
+    router.submit(a)
+    router.submit(b)
+    router.step()                        # a dispatched+started, b queued
+    router.replicas[0].engine.submit(b)  # force b onto the replica unstarted
+    router.tiers[0].clear()
+    router._begin_drain(router.replicas[0], reason="test")
+    # b came back and sits at the front of its tier awaiting a healthy replica
+    assert [rec.req.rid for rec in router.tiers[0]] == [1]
+    assert router.replicas[0].state == "draining"
+
+
+# ---------------------------------------------------------------------------
+# single-replica identity + from_service_plan wiring
+# ---------------------------------------------------------------------------
+
+
+def test_single_replica_router_output_identical_to_direct_engine(small_model):
+    cfg, params = small_model
+    cluster = tpu_slice_cluster(n_slices=2, heterogeneous=True)
+    prompts = [[1, 2, 3], [4, 5], [6]]
+
+    direct = _engine(cfg, params, cluster)
+    d_reqs = [Request(rid=i, prompt=p, max_new_tokens=4)
+              for i, p in enumerate(prompts)]
+    for r in d_reqs:
+        direct.submit(r)
+    direct.run_until_drained()
+
+    graph = transformer_graph(cfg, seq_len=64, granularity="block")
+    svc = plan_replicas(
+        graph, cluster, PlanConfig(method="etf", serving_slots=2), replicas=1
+    )
+    router = Router.from_service_plan(
+        cfg, params, cluster, svc, slots=2, max_len=64,
+        plan_cfg=PlanConfig(method="etf"), eos_id=-1,
+    )
+    # the replica runs the ORIGINAL cluster + the service plan's placement
+    eng = router.replicas[0].engine
+    assert eng.cluster is cluster
+    assert eng.placement_result is svc.replicas[0].result
+    toks = {}
+    r_reqs = [Request(rid=i, prompt=p, max_new_tokens=4)
+              for i, p in enumerate(prompts)]
+    for r in r_reqs:
+        router.submit(
+            r, on_token=lambda rq, t: toks.setdefault(rq.rid, []).append(t)
+        )
+    router.run_until_drained()
+    for d, r in zip(d_reqs, r_reqs):
+        assert r.done
+        assert r.out_tokens == d.out_tokens        # bit-identical serving
+        assert toks[r.rid] == r.out_tokens         # streamed = generated
+
+
+def test_from_service_plan_multi_replica_serves(small_model):
+    cfg, params = small_model
+    cluster = tpu_slice_cluster(n_slices=2)
+    graph = transformer_graph(cfg, seq_len=64, granularity="block")
+    svc = plan_replicas(
+        graph, cluster, PlanConfig(method="etf", serving_slots=2), replicas=2
+    )
+    router = Router.from_service_plan(
+        cfg, params, cluster, svc, slots=2, max_len=64,
+        plan_cfg=PlanConfig(method="etf"), eos_id=-1,
+    )
+    assert len(router.replicas) == 2
+    # subcluster engines got LOCAL placements over their own device count
+    for rep, spec in zip(router.replicas, svc.replicas):
+        assert rep.devices == spec.devices
+        k = rep.engine.cluster.k
+        assert set(rep.engine.placement_result.placement.values()) <= set(
+            range(k)
+        )
+    reqs = [Request(rid=i, prompt=[1 + i, 2], max_new_tokens=3)
+            for i in range(4)]
+    for r in reqs:
+        router.submit(r)
+    router.run_until_drained()
+    assert all(r.done and len(r.out_tokens) == 3 for r in reqs)
+    used = {e["replica"] for e in router.events if e["kind"] == "dispatch"}
+    assert used == {"replica0", "replica1"}
+
+
+def test_router_rejects_bad_config(small_model):
+    cfg, params = small_model
+    with pytest.raises(ValueError):
+        RouterConfig(dispatch="round_robin")
+    with pytest.raises(ValueError):
+        RouterConfig(tiers=0)
+    with pytest.raises(ValueError):
+        Router([])
+    eng = _engine(cfg, params, tpu_slice_cluster(n_slices=1))
+    with pytest.raises(ValueError, match="duplicate"):
+        Router([
+            Replica(name="r", devices=[0], engine=eng),
+            Replica(name="r", devices=[0], engine=eng),
+        ])
+
+
+def test_engine_rejects_placement_for_wrong_graph(small_model):
+    cfg, params = small_model
+    cluster = tpu_slice_cluster(n_slices=1)
+    other = transformer_graph(cfg, seq_len=32, granularity="fine")
+    from repro.core.placement import plan
+
+    res = plan(other, cluster, PlanConfig(method="etf"))
+    with pytest.raises(ValueError, match="does not cover"):
+        _engine(cfg, params, cluster, placement_result=res)

@@ -1,0 +1,141 @@
+"""Calibration of ``scale_node_to_tokens`` against attention's quadratic term.
+
+The old scaling was linear in the token count — fine for FFN/projection work,
+but attention's score/context term grows with queries × keys, so long chunks
+were underbilled (ROADMAP follow-on).  The model-graph builders now record
+each node's quadratic share in ``meta`` and the rescaler bills it
+``(tokens/seq_len) × (context_tokens/seq_len)``: a standalone pass rescaled
+to ``t`` tokens must EXACTLY reproduce a graph natively built at
+``seq_len=t``, and the causal-context form must separate early chunks (short
+KV span) from late ones (full span).
+"""
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.costmodel import CostModel
+from repro.core.devices import inter_server_cluster
+from repro.core.modelgraph import transformer_graph
+from repro.core.simulate import (
+    bottleneck_time,
+    prefill_busy,
+    scale_node_to_tokens,
+)
+
+LONG = 2048  # the ISSUE's calibration point: prompt_len >= 2048
+
+
+def _cfg():
+    return get_config("llama3.2-1b")
+
+
+@pytest.mark.parametrize("granularity", ["block", "layer", "fine"])
+@pytest.mark.parametrize("src_len", [256, 4096])
+def test_standalone_rescale_matches_native_graph(granularity, src_len):
+    """A whole pass rescaled src_len -> 2048 equals the graph built at 2048.
+
+    Covers both extrapolation (256 -> 2048, where the linear model was off
+    worst) and interpolation (4096 -> 2048).  Output payloads of the s×s
+    score tensors stay linearly scaled (comm fidelity documented in
+    scale_node_to_tokens), so the comparison is the roofline inputs:
+    flops, bytes_accessed, param_bytes."""
+    cfg = _cfg()
+    g_src = transformer_graph(cfg, seq_len=src_len, granularity=granularity)
+    g_ref = transformer_graph(cfg, seq_len=LONG, granularity=granularity)
+    assert set(g_src.nodes) == set(g_ref.nodes)
+    for nid, ref in g_ref.nodes.items():
+        scaled = scale_node_to_tokens(g_src.nodes[nid], LONG, src_len)
+        assert scaled.flops == pytest.approx(ref.flops, rel=1e-9), (
+            nid, ref.op_type
+        )
+        assert scaled.param_bytes == pytest.approx(ref.param_bytes, rel=1e-9)
+        # weights are never rescaled; the activation share (linear + quad)
+        # must land exactly on the native graph's
+        assert scaled.bytes_accessed == pytest.approx(
+            ref.bytes_accessed, rel=1e-9
+        ), (nid, ref.op_type)
+
+
+def test_linear_approximation_underbills_long_chunks():
+    """Stripping the quad metadata reproduces the old linear model — and at
+    the 2048-token calibration point it underbills attention by far more
+    than the tolerance the exact form meets (>5% on the fused block)."""
+    cfg = _cfg()
+    g_src = transformer_graph(cfg, seq_len=256, granularity="block")
+    g_ref = transformer_graph(cfg, seq_len=LONG, granularity="block")
+    block = next(nid for nid, n in g_src.nodes.items() if n.op_type == "block")
+    lin_node = g_src.nodes[block].copy()
+    lin_node.meta = {}
+    lin = scale_node_to_tokens(lin_node, LONG, 256)
+    ref = g_ref.nodes[block]
+    assert lin.flops < 0.95 * ref.flops
+    exact = scale_node_to_tokens(g_src.nodes[block], LONG, 256)
+    assert exact.flops == pytest.approx(ref.flops, rel=1e-9)
+
+
+def test_causal_context_orders_chunk_costs():
+    """Chunk cost is monotone in the KV span it attends: an early chunk
+    (context = itself) is cheaper than a mid-prompt chunk, which is cheaper
+    than the last chunk attending the whole 2048-token cache."""
+    cfg = _cfg()
+    g = transformer_graph(cfg, seq_len=LONG, granularity="block")
+    node = next(n for n in g.nodes.values() if n.op_type == "block")
+    early = scale_node_to_tokens(node, 256, LONG)                       # ctx=256
+    mid = scale_node_to_tokens(node, 256, LONG, context_tokens=1024)
+    late = scale_node_to_tokens(node, 256, LONG, context_tokens=LONG)
+    assert early.flops < mid.flops < late.flops
+    # the linear share is identical — only the quadratic part moves
+    quad = node.meta["quad_flops"]
+    assert late.flops - early.flops == pytest.approx(
+        quad * (256 / LONG) * ((LONG - 256) / LONG), rel=1e-9
+    )
+
+
+def test_chunked_prefill_busy_sums_causal_spans():
+    """prefill_busy's per-device seconds at prompt_len=2048 equal the sum of
+    its chunks costed at their true causal KV spans — and strictly exceed
+    what chunk-local (context-free) costing would charge."""
+    cfg = _cfg()
+    g = transformer_graph(cfg, seq_len=LONG, granularity="block")
+    cl = inter_server_cluster()
+    cm = CostModel(cl)
+    pl = {nid: i % cl.k for i, nid in enumerate(g.topo_order())}
+    from repro.core.simulate import prefill_compute_time
+
+    busy = prefill_busy(g, pl, cm, prompt_len=LONG, prefill_chunk=256)
+    manual = {}
+    run = 0
+    for _ in range(LONG // 256):
+        t = 256
+        run += t
+        for nid, node in g.nodes.items():
+            k = pl[nid]
+            manual[k] = manual.get(k, 0.0) + prefill_compute_time(
+                cm, node, k, t, LONG, run
+            )
+    for k, v in manual.items():
+        assert busy[("dev", k)] == pytest.approx(v, rel=1e-9)
+    # context-free costing (every chunk priced as if it attended only
+    # itself) is a strict underbill once the cache grows
+    local = {}
+    for nid, node in g.nodes.items():
+        k = pl[nid]
+        local[k] = local.get(k, 0.0) + (LONG // 256) * prefill_compute_time(
+            cm, node, k, 256, LONG
+        )
+    assert sum(manual.values()) > sum(local.values())
+
+
+def test_bottleneck_time_superlinear_in_prompt_len():
+    """With the quadratic term billed, whole-prompt prefill busy time grows
+    superlinearly in the prompt: the 2048-token prompt costs more than 2×
+    the 1024-token one once the decode-only baseline is subtracted."""
+    cfg = _cfg()
+    g = transformer_graph(cfg, seq_len=LONG, granularity="block")
+    cl = inter_server_cluster()
+    cm = CostModel(cl)
+    pl = {nid: i % cl.k for i, nid in enumerate(g.topo_order())}
+    b0 = bottleneck_time(g, pl, cm)
+    b1 = bottleneck_time(g, pl, cm, prompt_len=1024, prefill_chunk=None)
+    b2 = bottleneck_time(g, pl, cm, prompt_len=LONG, prefill_chunk=None)
+    assert (b2 - b0) > 2.0 * (b1 - b0)
