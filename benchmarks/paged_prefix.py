@@ -1,0 +1,230 @@
+"""Paged KV + hash-based prefix sharing vs dense rows (ISSUE 8).
+
+Scenario: a **shared-system-prompt** workload — every request opens with
+the SAME ~512-token system prefix (the agent/RAG deployment shape), followed
+by a bimodal suffix (short chat turns with longer document questions mixed
+in), Poisson arrivals — served twice by the real `ServingEngine` +
+`StageExecutor` stack (smoke-sized model, CPU wall clock), fused ragged
+chunked prefill in both runs:
+
+* **dense** — the ISSUE-7 engine: every admitted request owns a full
+  ``(max_len,)`` KV row, and its ~512 prefix tokens are re-prefilled
+  chunk by chunk even though every other request just computed the
+  identical KV;
+* **paged** — ``kv_page_tokens=64`` + prefix sharing: the cache is a page
+  pool behind per-slot page tables; the first request to finish prefill
+  registers its prompt pages under chunk-aligned prefix hashes, and every
+  later admission that hash-matches maps those pages read-only (refcount),
+  **skips the matched prefill chunks entirely**, and copies-on-write at
+  first divergence.
+
+Two headline numbers, both measured on the engine:
+
+* steady requests/sec (wall clock between first and last completion) —
+  paged must reach >= **1.3x** dense: skipped prefix chunks are engine
+  steps that never run;
+* KV bytes per in-flight request — sampled every engine step as
+  ``pages_in_use x page_tokens`` (paged) vs ``n_active x max_len``
+  (dense), averaged over the serve; paged must be <= **0.6x** dense:
+  shared prefix pages are resident ONCE, and short suffixes stop paying
+  for max_len-sized rows.
+
+Outputs must be token-identical across the two runs (same greedy decode,
+different storage layout) — the differential contract `tests/test_paged_kv.py`
+pins, re-checked here end-to-end.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+try:
+    from common import write_bench_json   # run directly: python benchmarks/x.py
+except ImportError:  # imported as a package module (benchmarks.run)
+    from .common import write_bench_json
+
+from repro.configs import get_config
+from repro.core.devices import tpu_slice_cluster
+from repro.core.placement import PlanConfig
+from repro.serving.engine import Request, ServingEngine
+
+SLOTS = 4
+N_REQUESTS = 24
+PREFIX_LEN = 512        # the shared system prompt every request opens with
+SHORT_SUFFIX = 12       # chat-turn mode
+LONG_SUFFIX = 96        # document-question mode (every 4th request)
+LONG_EVERY = 4
+PREFILL_CHUNK = 64
+PAGE_TOKENS = 64
+MAX_LEN = PREFIX_LEN + LONG_SUFFIX + 48
+SEED = 0
+ARRIVAL_RATE_PER_STEP = 2.0
+MAX_STEPS = 40_000
+
+
+def _workload(seed: int) -> List[Tuple[List[int], int]]:
+    """(prompt, max_new) pairs sharing one ~512-token system prefix with
+    bimodal per-request suffixes — the shape where dense rows re-prefill
+    (and re-store) the same prefix KV once per request."""
+    rng = np.random.default_rng(seed)
+    prefix = [int(t) for t in rng.integers(1, 200, size=PREFIX_LEN)]
+    out = []
+    for i in range(N_REQUESTS):
+        if i % LONG_EVERY == LONG_EVERY - 1:
+            slen = int(rng.integers(LONG_SUFFIX - 16, LONG_SUFFIX + 17))
+        else:
+            slen = int(rng.integers(max(SHORT_SUFFIX - 8, 1), SHORT_SUFFIX + 9))
+        suffix = [int(t) for t in rng.integers(1, 200, size=slen)]
+        out.append((prefix + suffix, int(rng.integers(8, 17))))
+    return out
+
+
+def _arrival_steps(seed: int) -> List[int]:
+    rng = np.random.default_rng(seed + 1)
+    gaps = rng.exponential(1.0 / ARRIVAL_RATE_PER_STEP, size=N_REQUESTS)
+    return [int(s) for s in np.floor(np.cumsum(gaps))]
+
+
+def _kv_token_bytes(cfg) -> float:
+    """Bytes of K+V per cached token (attention layers, bf16)."""
+    n_attn = cfg.n_layers
+    return 2.0 * n_attn * cfg.n_kv_heads * cfg.head_dim * 2.0
+
+
+def _serve(engine: ServingEngine, workload, arrivals) -> Dict[str, float]:
+    """Drive one engine through the Poisson workload; wall-clock steady
+    req/s plus the per-step KV-residency samples the bytes metric averages."""
+    reqs = [
+        Request(rid=i, prompt=list(p), max_new_tokens=m)
+        for i, (p, m) in enumerate(workload)
+    ]
+    done_t: Dict[int, float] = {}
+    kv_tokens_samples: List[float] = []   # resident KV tokens per active req
+    next_sub = 0
+    step = 0
+    t0 = time.perf_counter()
+    while len(done_t) < len(reqs) and step < MAX_STEPS:
+        while next_sub < len(reqs) and arrivals[next_sub] <= step:
+            engine.submit(reqs[next_sub])
+            next_sub += 1
+        engine.step()
+        n_active = sum(r is not None for r in engine.active)
+        if n_active:
+            if engine._kv_pool is not None:
+                resident = engine._kv_pool.pages_in_use() * engine._kv_pool.page_tokens
+            else:
+                resident = n_active * engine.max_len
+            kv_tokens_samples.append(resident / n_active)
+        now = time.perf_counter()
+        for r in reqs:
+            if r.done and r.rid not in done_t:
+                done_t[r.rid] = now
+        step += 1
+    assert len(done_t) == len(reqs), f"engine stalled at step {step}"
+    times = sorted(done_t.values())
+    span = times[-1] - times[0]
+    return {
+        "steady_rps": (len(reqs) - 1) / span if span > 0 else float("inf"),
+        "wall_s": times[-1] - t0,
+        "steps": float(step),
+        "kv_tokens_per_req": float(np.mean(kv_tokens_samples)),
+        "outputs": [list(r.out_tokens) for r in reqs],
+    }
+
+
+def run(arch: str = "llama3.2-1b") -> Dict[str, float]:
+    cfg = get_config(arch).smoke()
+    import jax
+    from repro.models.model import build_model
+
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cluster = tpu_slice_cluster(n_slices=1)
+    workload = _workload(SEED)
+    arrivals = _arrival_steps(SEED)
+    # identical engines except for the storage layout: the paged run reads
+    # kv_page_tokens/prefix_sharing off its plan config — the same
+    # plan-drives-runtime path serve.py's --kv-page-tokens flag uses
+    mk = lambda paged: ServingEngine(
+        cfg, params, cluster, slots=SLOTS, max_len=MAX_LEN,
+        plan_cfg=PlanConfig(
+            method="etf", prefill_chunk=PREFILL_CHUNK,
+            kv_page_tokens=PAGE_TOKENS if paged else None,
+        ),
+        eos_id=-1,
+    )
+
+    print(
+        f"\n# paged-prefix: {arch} (smoke), slots={SLOTS}, {N_REQUESTS} "
+        f"Poisson requests sharing a {PREFIX_LEN}-tok system prefix "
+        f"(suffixes ~{SHORT_SUFFIX}/{LONG_SUFFIX} tok bimodal), "
+        f"chunk={PREFILL_CHUNK}, pages of {PAGE_TOKENS} tok"
+    )
+    res: Dict[str, Dict[str, float]] = {}
+    for name, paged in (("dense", False), ("paged", True)):
+        res[name] = _serve(mk(paged), workload, arrivals)
+        print(
+            f"  {name:>5s}: {res[name]['steady_rps']:8.2f} req/s steady, "
+            f"{res[name]['steps']:6.0f} engine steps, "
+            f"{res[name]['kv_tokens_per_req']:7.1f} KV tok/req resident, "
+            f"{res[name]['wall_s']:6.2f}s wall"
+        )
+
+    identical = res["paged"]["outputs"] == res["dense"]["outputs"]
+    print(f"  paged outputs token-identical to dense: {identical}")
+
+    speedup = res["paged"]["steady_rps"] / res["dense"]["steady_rps"]
+    tb = _kv_token_bytes(cfg)
+    kv_ratio = (
+        res["paged"]["kv_tokens_per_req"] / res["dense"]["kv_tokens_per_req"]
+    )
+    print(
+        f"  paged/dense = {speedup:.2f}x steady req/s; KV bytes/request = "
+        f"{res['paged']['kv_tokens_per_req'] * tb / 2**20:.2f} vs "
+        f"{res['dense']['kv_tokens_per_req'] * tb / 2**20:.2f} MiB "
+        f"({kv_ratio:.2f}x)"
+    )
+
+    return {
+        "paged_rps": res["paged"]["steady_rps"],
+        "dense_rps": res["dense"]["steady_rps"],
+        "speedup": speedup,
+        "kv_bytes_per_req_paged": res["paged"]["kv_tokens_per_req"] * tb,
+        "kv_bytes_per_req_dense": res["dense"]["kv_tokens_per_req"] * tb,
+        "kv_bytes_ratio": kv_ratio,
+        "token_identical": float(identical),
+        "slots": float(SLOTS),
+        "n_requests": float(N_REQUESTS),
+        "prefix_len": float(PREFIX_LEN),
+        "page_tokens": float(PAGE_TOKENS),
+        "prefill_chunk": float(PREFILL_CHUNK),
+        "max_len": float(MAX_LEN),
+    }
+
+
+def main() -> None:
+    m = run()
+    write_bench_json("paged_prefix", m, bar=1.3, measured=m["speedup"])
+    assert m["token_identical"] == 1.0, (
+        "paged serving must be token-for-token identical to dense rows"
+    )
+    assert m["speedup"] >= 1.3, (
+        f"prefix-sharing paged serving must reach >= 1.3x dense steady "
+        f"req/s on the shared-prefix workload; got {m['speedup']:.2f}x"
+    )
+    assert m["kv_bytes_ratio"] <= 0.6, (
+        f"paged residency must be <= 0.6x dense KV bytes/request; got "
+        f"{m['kv_bytes_ratio']:.2f}x"
+    )
+    print(
+        f"\npaged prefix sharing: {m['speedup']:.2f}x dense steady req/s "
+        f"(bar 1.3x), {m['kv_bytes_ratio']:.2f}x KV bytes/request "
+        f"(bar <= 0.6x), token-identical greedy decode"
+    )
+
+
+if __name__ == "__main__":
+    main()

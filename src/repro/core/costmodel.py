@@ -56,6 +56,37 @@ DEFAULT_BATCH_INVARIANT_FRAC: Dict[str, float] = {
 }
 
 
+def paged_kv_factor(
+    page_tokens: Optional[int],
+    seq_tokens: Optional[int],
+    residency: float = 1.0,
+) -> float:
+    """Ratio of paged to dense per-slot KV residency under Eq. 5.
+
+    A dense slot charges ``seq_tokens`` (S) cache entries; a paged slot
+    charges whole pages for the tokens it is *expected* to hold —
+    ``ceil(residency · S / P)`` pages of ``P`` tokens (at least one page:
+    an admitted sequence always maps its first page).  The factor is the
+    multiplier on ``node.kv_bytes`` (which is sized for S tokens):
+
+        factor = ceil(max(residency, eps) · S / P) · P / S
+
+    Exactly 1.0 when paging is off (``page_tokens`` or ``seq_tokens`` is
+    None) and when ``P = S`` at ``residency = 1.0`` — the collapse-to-dense
+    regression pin.  ``residency < 1`` is the configurable expected-residency
+    estimate (typical prompt+generation length as a fraction of max_len);
+    prefix sharing reduces true residency further, but the planner charges
+    un-shared pages — sharing is headroom, not a promise."""
+    if page_tokens is None or seq_tokens is None:
+        return 1.0
+    P, S = int(page_tokens), int(seq_tokens)
+    if P <= 0 or S <= 0:
+        return 1.0
+    r = min(max(float(residency), 0.0), 1.0)
+    pages = max(-(-int(np.ceil(r * S - 1e-9)) // P), 1)
+    return pages * P / S
+
+
 @dataclass
 class CostModel:
     """Per-(op, device) compute time, per-flow transfer time, and Eq. 5
@@ -84,6 +115,16 @@ class CostModel:
     batch_invariant_frac: Mapping[str, float] = field(
         default_factory=lambda: dict(DEFAULT_BATCH_INVARIANT_FRAC)
     )
+    # paged-KV accounting (Eq. 5 page term): with kv_page_tokens set, the KV
+    # term per slot charges ceil(residency · S / P) · P tokens — pages
+    # actually resident under the expected-residency estimate — instead of
+    # the dense max_len row.  kv_seq_tokens is the graph's per-slot token
+    # capacity S (node.kv_bytes is sized for S tokens); kv_residency is the
+    # expected fill fraction of a slot's row (1.0 = worst case; pinned so
+    # page_tokens = S at residency 1.0 reproduces dense numbers exactly)
+    kv_page_tokens: Optional[int] = None
+    kv_residency: float = 1.0
+    kv_seq_tokens: Optional[int] = None
 
     def __post_init__(self):
         if self.device_scale is None:
@@ -227,14 +268,21 @@ class CostModel:
     # ---------------------------------------------------------- memory fit
     def kv_bytes(self, node: OpNode) -> float:
         """Per-request resident KV-cache bytes of ``node`` (0 for stateless ops)."""
-        return node.kv_bytes
+        return node.kv_bytes * self._kv_factor()
+
+    def _kv_factor(self) -> float:
+        return paged_kv_factor(
+            self.kv_page_tokens, self.kv_seq_tokens, self.kv_residency
+        )
 
     def resident_bytes(self, node: OpNode, serving_slots: int = 1) -> float:
         """Eq. 5 resident cost of hosting ``node``: weights plus one KV-cache
         copy per concurrently served request (serving slot).  With
         ``serving_slots=1`` this is the paper's single-query memory model plus
-        the one in-flight request's cache."""
-        return node.param_bytes + max(serving_slots, 1) * node.kv_bytes
+        the one in-flight request's cache.  With paging configured
+        (``kv_page_tokens``), each slot's copy charges resident *pages*
+        rather than the dense ``max_len`` row — see :func:`paged_kv_factor`."""
+        return node.param_bytes + max(serving_slots, 1) * self.kv_bytes(node)
 
     def memory_ok(
         self,
@@ -391,4 +439,7 @@ def calibrate_from_cost_analysis(
         dispatch_overhead_s=cm.dispatch_overhead_s,
         device_scale=cm.device_scale.copy(),
         batch_invariant_frac=dict(cm.batch_invariant_frac),
+        kv_page_tokens=cm.kv_page_tokens,
+        kv_residency=cm.kv_residency,
+        kv_seq_tokens=cm.kv_seq_tokens,
     )

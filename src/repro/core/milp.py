@@ -204,6 +204,7 @@ def solve_placement(
             prefill_chunk_sizes,
             prefill_compute_time,
             resolve_graph_seq_len,
+            scale_edge_bytes,
         )
 
         pct = fused_prefill_compute_time if fused_prefill else prefill_compute_time
@@ -223,10 +224,11 @@ def solve_placement(
                     for k in range(K)
                 ])
             frac = float(toks) / float(s_graph)
+            cfrac = float(ctx) / float(s_graph)
             for q in comms:
-                pcomm_pre[q] = pcomm_pre[q] + n * cost.comm_matrix(
-                    aug.comm[q].bytes * frac
-                )
+                c = aug.comm[q]
+                payload = scale_edge_bytes(graph.nodes[c.src], c.bytes, frac, cfrac)
+                pcomm_pre[q] = pcomm_pre[q] + n * cost.comm_matrix(payload)
 
     # schedule horizon (valid big-M): a feasible UB if given, else every task
     # once at its worst cost

@@ -172,14 +172,20 @@ def transformer_graph(
             flops=2.0 * s * s * h * hd,
             bytes_accessed=(2 * s * h * hd + s * s * h) * BF16,
             output_bytes=s * s * h * BF16,
+            # quad_out_bytes: the s×s output payload itself is quadratic, so
+            # a stage cut right after this node bills its comm queries × keys
+            # too (scale_edge_bytes), not linearly in the chunk
             meta={"quad_flops": 2.0 * s * s * h * hd,
-                  "quad_bytes": s * s * h * BF16},
+                  "quad_bytes": s * s * h * BF16,
+                  "quad_out_bytes": s * s * h * BF16},
         )
         msk = _elt(g, "mask", scores, s * s * h)
         sm = _elt(g, "softmax", msk, s * s * h)
         for _q in (msk, sm):   # elementwise over the s×s score matrix
             g.nodes[_q].meta.update(
-                quad_flops=g.nodes[_q].flops, quad_bytes=g.nodes[_q].bytes_accessed
+                quad_flops=g.nodes[_q].flops,
+                quad_bytes=g.nodes[_q].bytes_accessed,
+                quad_out_bytes=g.nodes[_q].output_bytes,
             )
         ctx = g.add(
             "matmul",  # probs·V

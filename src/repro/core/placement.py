@@ -32,6 +32,7 @@ heuristic's memory caps, and candidate scoring alike.
 
 from __future__ import annotations
 
+import dataclasses
 import time as _time
 from dataclasses import dataclass
 from typing import Dict, Iterable, Mapping, Optional, Sequence
@@ -128,6 +129,25 @@ class PlanConfig:
         the offered load it is checked at, and the auto-mode search cap.
         :func:`plan` itself ignores them, so the single-pipeline path is
         bit-identical to the pre-replica planner.
+    kv_page_tokens:
+        Serve the KV cache as fixed-size pages of this many tokens (block
+        paging): the engine allocates pages on demand instead of dense
+        ``max_len`` rows, and Eq. 5's resident-memory term charges pages
+        actually resident — ``kv_bytes`` is scaled by
+        :func:`repro.core.costmodel.paged_kv_factor` (page-rounded expected
+        residency) in the MILP, every heuristic cap, and the engine's
+        admission guard.  ``None`` (default) keeps dense rows and the
+        exact legacy ``slots × kv_bytes`` accounting.
+    prefix_sharing:
+        With paging, share read-only prompt-prefix pages across requests
+        keyed by chunk-aligned prefix hashes: matching prefixes reuse
+        pages (their prefill chunks are skipped), diverging writes copy on
+        write, and refcount-0 registered pages linger on an LRU ring for
+        reuse until evicted.  ``False`` gives every request private pages.
+    kv_residency:
+        Expected fraction of ``max_len`` a sequence actually occupies —
+        scales the paged Eq. 5 term's page count (``1.0`` = worst case,
+        every slot full).  Ignored without ``kv_page_tokens``.
     """
 
     method: str = "moirai"           # moirai|etf|getf|msct|bottleneck_balance|placeto|round_robin|single
@@ -154,6 +174,23 @@ class PlanConfig:
     # its serving path — fused one-program steps (True) vs the legacy
     # interleaved per-slot prefill forwards (False)
     fused_prefill: bool = True
+    # ---- paged KV cache (serving engine + Eq. 5 accounting) -------------
+    # tokens per KV page: set to page the serving engine's KV cache (fixed
+    # page pools per stage device + per-slot page tables) AND switch Eq. 5's
+    # KV term — in the MILP, every heuristic's memory cap, and envelope
+    # scoring — to pages actually resident (ceil(kv_residency·S/P)·P tokens
+    # per slot) instead of dense max_len rows.  None = dense (bit-identical
+    # to the pre-paging planner); page_tokens = max_len at kv_residency 1.0
+    # reproduces the dense numbers exactly
+    kv_page_tokens: Optional[int] = None
+    # hash-based prefix sharing across requests (chunk-aligned prefix hashes
+    # → refcounted read-only pages, COW on divergence, LRU eviction); the
+    # planner does NOT discount for it — sharing is headroom, not a promise
+    prefix_sharing: bool = True
+    # expected fill fraction of a slot's cache row (typical prompt+generation
+    # length / max_len) — the configurable expected-residency estimate the
+    # page term charges; 1.0 = worst case
+    kv_residency: float = 1.0
     coarsen: bool = True             # GCOF (Fig. 10 c/d vs a/b)
     rules: Optional[Sequence[Sequence[str]]] = None
     time_limit: float = 120.0
@@ -213,7 +250,19 @@ def plan(
     cfg = config or PlanConfig()
     for k, v in overrides.items():
         setattr(cfg, k, v)
-    cost = cost or CostModel(cluster)
+    if cost is None:
+        cost = CostModel(cluster)
+    if getattr(cfg, "kv_page_tokens", None) and cost.kv_page_tokens is None:
+        # paged Eq. 5: charge resident pages, not dense rows — the SAME
+        # accounting the serving engine's admission uses, threaded through
+        # the MILP memory term, heuristic caps, and envelope scoring via
+        # this one cost model.  (A caller-supplied paged cost is respected.)
+        cost = dataclasses.replace(
+            cost,
+            kv_page_tokens=int(cfg.kv_page_tokens),
+            kv_seq_tokens=getattr(graph, "seq_len", None),
+            kv_residency=float(getattr(cfg, "kv_residency", 1.0) or 1.0),
+        )
     if cfg.objective not in ("latency", "throughput"):
         raise ValueError(f"unknown objective {cfg.objective!r}")
 

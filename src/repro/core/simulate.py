@@ -157,6 +157,18 @@ def resolve_graph_seq_len(graph: OpGraph, seq_len: Optional[int]) -> int:
     return int(s)
 
 
+def scale_edge_bytes(node: OpNode, payload: float, frac: float, cfrac: float) -> float:
+    """Token-rescale a payload emitted by ``node`` (its output tensor, which
+    is also what comm nodes carry across a stage cut).  s²-shaped outputs —
+    attention score/probability tensors in the fine-granularity graph —
+    record their quadratic share as ``meta["quad_out_bytes"]``: that share
+    is billed queries × keys (``frac × cfrac``), the rest linearly with the
+    chunk.  Nodes without the meta key keep the old linear scaling."""
+    meta = node.meta or {}
+    quad = min(float(meta.get("quad_out_bytes", 0.0)), float(payload))
+    return (payload - quad) * frac + quad * frac * cfrac
+
+
 def scale_node_to_tokens(
     node: OpNode,
     tokens: int,
@@ -203,7 +215,7 @@ def scale_node_to_tokens(
     act = max(node.bytes_accessed - inv, 0.0)
     quad_b = min(float(meta.get("quad_bytes", 0.0)), act)
     scaled.bytes_accessed = inv + (act - quad_b) * frac + quad_b * frac * cfrac
-    scaled.output_bytes = node.output_bytes * frac
+    scaled.output_bytes = scale_edge_bytes(node, node.output_bytes, frac, cfrac)
     if serial:
         # hierarchy supernodes carry (flops, bytes, op_type) member triples
         # with no per-member weight or quad split: scale both terms linearly
@@ -290,8 +302,10 @@ def _prefill_task_table(
     (``_task_table``), durations rescaled to the chunk's token count (and
     its ``context_tokens`` KV span for attention's quadratic share).
     ``fused_prefill`` bills devices at the marginal (fused mixed-batch)
-    rate; comm payloads are unchanged — activations cross stage boundaries
-    whether or not the chunk shares a program with decode rows."""
+    rate.  Comm payloads scale with the chunk — and an s²-shaped payload
+    (a score tensor crossing a stage cut) bills its ``quad_out_bytes``
+    share queries × keys, like the compute it feeds
+    (:func:`scale_edge_bytes`)."""
     pct = fused_prefill_compute_time if fused_prefill else prefill_compute_time
     dur: Dict[int, float] = {}
     resource: Dict[int, Tuple] = {}
@@ -300,13 +314,15 @@ def _prefill_task_table(
         dur[nid] = pct(cost, node, k, tokens, seq_len, context_tokens)
         resource[nid] = ("dev", k)
     frac = float(tokens) / float(seq_len)
+    cfrac = float(context_tokens if context_tokens is not None else tokens) / float(seq_len)
     for q, c in aug.comm.items():
         ks, kd = placement[c.src], placement[c.dst]
         if ks == kd:
             dur[q] = 0.0
             resource[q] = ("local",)
         else:
-            dur[q] = cost.comm_time(c.bytes * frac, ks, kd)
+            payload = scale_edge_bytes(graph.nodes[c.src], c.bytes, frac, cfrac)
+            dur[q] = cost.comm_time(payload, ks, kd)
             resource[q] = ("chan", ks, kd)
     return dur, resource
 
@@ -351,13 +367,13 @@ def prefill_busy(
             key = ("dev", k)
             busy[key] = busy.get(key, 0.0) + n * pct(cost, node, k, t, s, ctx)
         frac = float(t) / float(s)
+        cfrac = float(ctx) / float(s)
         for q, c in aug.comm.items():
             ks, kd = placement[c.src], placement[c.dst]
             if ks != kd:
                 key = ("chan", ks, kd)
-                busy[key] = busy.get(key, 0.0) + n * cost.comm_time(
-                    c.bytes * frac, ks, kd
-                )
+                payload = scale_edge_bytes(graph.nodes[c.src], c.bytes, frac, cfrac)
+                busy[key] = busy.get(key, 0.0) + n * cost.comm_time(payload, ks, kd)
     return busy
 
 

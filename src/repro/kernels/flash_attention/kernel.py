@@ -117,6 +117,114 @@ def _flash_kernel(
         o_ref[...] = (acc_scr[...] / denom).astype(o_ref.dtype)
 
 
+def _flash_kernel_paged(
+    offs_ref,   # scalar-prefetch [BH] — per-row query offsets (cache depth)
+    lens_ref,   # scalar-prefetch [BH] — valid query rows per batch·head row
+    tbl_ref,    # scalar-prefetch [B, pages_per_slot] — page table: logical
+                # KV block j of batch row b lives in physical page
+                # tbl[b, j] (invalid entries pre-clamped to the trash page)
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    **kw,
+):
+    """Paged flash kernel body: identical math to :func:`_flash_kernel`.
+
+    The page table is consumed by the K/V BlockSpec *index maps* (physical
+    page selection happens at DMA-schedule time, before the body runs); the
+    body itself still sees logical positions — ``kp = kj·block_k + iota`` is
+    the logical KV position because grid axis 2 walks logical pages — so
+    causal/window masking is unchanged and needs no gather."""
+    del tbl_ref  # consumed by the BlockSpec index maps, not the body
+    _flash_kernel(
+        offs_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+        m_scr, l_scr, acc_scr, **kw,
+    )
+
+
+def flash_attention_pallas_paged(
+    q: jax.Array,            # [BH, Sq, D] (GQA-folded, row-major (b, kv, rep))
+    pool_k: jax.Array,       # [num_pages + 1, P, KV, D] — last page = trash
+    pool_v: jax.Array,       # [num_pages + 1, P, KV, D]
+    table: jax.Array,        # [B, pages_per_slot] int32, trash-clamped (≥ 0)
+    *,
+    scale: float,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_offsets: Optional[jax.Array] = None,   # [BH] per-row query offsets
+    q_lens: Optional[jax.Array] = None,      # [BH] valid query rows
+    kv_heads: int = 1,
+    rep: int = 1,
+    block_q: int = DEFAULT_BQ,
+    interpret: bool = False,
+) -> jax.Array:
+    """Flash attention reading K/V *through a page table* — no logical-row
+    gather is ever materialized.  ``block_k`` is pinned to the page size so
+    each KV grid step maps 1:1 onto one physical page: the K/V index maps
+    read ``table[b, j]`` from the scalar-prefetch operand and point the DMA
+    at that page of the pool (kv-head axis indexed per folded row)."""
+    bh, sq, d = q.shape
+    page_tokens = pool_k.shape[1]
+    pages_per_slot = table.shape[1]
+    assert sq % block_q == 0, (sq, block_q)
+    assert bh == table.shape[0] * kv_heads * rep, (bh, table.shape, kv_heads, rep)
+    n_q = sq // block_q
+    k_len = pages_per_slot * page_tokens
+    if q_offsets is None:
+        q_offsets = jnp.zeros((bh,), jnp.int32)
+    if q_lens is None:
+        q_lens = jnp.full((bh,), sq, jnp.int32)
+
+    kernel = functools.partial(
+        _flash_kernel_paged,
+        scale=scale,
+        causal=causal,
+        window=int(window or 0),
+        softcap=float(softcap or 0.0),
+        k_len=k_len,
+        n_kv_blocks=pages_per_slot,
+        block_q=block_q,
+        block_k=page_tokens,
+    )
+
+    def _kv_spec():
+        # block (1, P, 1, D): index maps pick (physical page, 0, kv head, 0)
+        # — tbl is the third scalar-prefetch ref, available at
+        # DMA-schedule time exactly like the (offs, lens) rows
+        return pl.BlockSpec(
+            (None, page_tokens, None, d),
+            lambda b, i, j, offs, lens, tbl: (
+                tbl[b // (kv_heads * rep), j], 0, (b // rep) % kv_heads, 0
+            ),
+        )
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(bh, n_q, pages_per_slot),
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda b, i, j, *_: (b, i, 0)),
+            _kv_spec(),
+            _kv_spec(),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda b, i, j, *_: (b, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        interpret=interpret,
+    )(
+        q_offsets.astype(jnp.int32),
+        q_lens.astype(jnp.int32),
+        table.astype(jnp.int32),
+        q, pool_k, pool_v,
+    )
+
+
 def flash_attention_pallas(
     q: jax.Array,            # [BH, Sq, D]
     k: jax.Array,            # [BH, Sk, D]

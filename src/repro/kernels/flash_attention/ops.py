@@ -26,7 +26,12 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .kernel import DEFAULT_BK, DEFAULT_BQ, flash_attention_pallas
+from .kernel import (
+    DEFAULT_BK,
+    DEFAULT_BQ,
+    flash_attention_pallas,
+    flash_attention_pallas_paged,
+)
 
 
 def _interpret_default() -> bool:
@@ -116,3 +121,88 @@ def flash_attention(
     )
     out = out[:, :sq, :d]
     return out.reshape(b, kv, rep, sq, d).transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale", "interpret"),
+)
+def flash_attention_paged(
+    q: jax.Array,            # [B, Sq, H, D]
+    pool_k: jax.Array,       # [num_pages + 1, P, KV, D] — last page = trash
+    pool_v: jax.Array,       # [num_pages + 1, P, KV, D]
+    table: jax.Array,        # [B, pages_per_slot] int32 (−1 = unmapped)
+    q_pos: Optional[jax.Array] = None,   # [Sq] or [B, Sq] query positions
+    q_lens: Optional[jax.Array] = None,  # [B] valid query rows per batch row
+    *,
+    scale: float,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Model-layout wrapper for the PAGED flash kernel: K/V live in a
+    physical page pool and the per-slot page table rides into the kernel as
+    a scalar-prefetch operand — the kernel's K/V index maps dereference it
+    per (row, page) grid step, so no ``[B, max_len]`` logical view is ever
+    gathered (the dense wrapper's KV broadcast across GQA groups is gone
+    too: the kv-head axis is indexed straight out of the pool).
+
+    Unmapped table entries (−1) are clamped to the reserved trash page
+    ``num_pages``; whatever garbage it holds sits at logical positions
+    beyond every row's written span, where the causal mask already
+    guarantees exact zero attention weight."""
+    if interpret is None:
+        interpret = _interpret_default()
+    b, sq, h, d = q.shape
+    kv = pool_k.shape[2]
+    rep = h // kv
+    num_pages = pool_k.shape[0] - 1
+    tbl = jnp.where(table >= 0, table, num_pages).astype(jnp.int32)
+
+    if q_pos is None:
+        offs = jnp.zeros((b,), jnp.int32)
+    elif q_pos.ndim == 2:                    # [B, Sq] — ragged rows
+        offs = q_pos[:, 0].astype(jnp.int32)
+    else:                                    # [Sq] shared across rows
+        offs = jnp.full((b,), q_pos[0].astype(jnp.int32))
+    offs_bh = jnp.repeat(offs, kv * rep)
+    lens_bh = (
+        None if q_lens is None else jnp.repeat(q_lens.astype(jnp.int32), kv * rep)
+    )
+
+    # fold GQA groups into the kernel's batch axis: [B·KV·rep, Sq, D]
+    qk = q.reshape(b, sq, kv, rep, d).transpose(0, 2, 3, 1, 4).reshape(
+        b * kv * rep, sq, d
+    )
+
+    # pad head_dim to the 128-lane boundary (pools included — on TPU the
+    # pool would be stored pre-padded; here the pad is the correctness
+    # path's price), queries to a block multiple
+    dp = (-d) % 128
+    if dp:
+        qk = jnp.pad(qk, ((0, 0), (0, 0), (0, dp)))
+        pool_k = jnp.pad(pool_k, ((0, 0), (0, 0), (0, 0), (0, dp)))
+        pool_v = jnp.pad(pool_v, ((0, 0), (0, 0), (0, 0), (0, dp)))
+    bq = min(DEFAULT_BQ, max(8, sq))
+    sqp = (-sq) % bq
+    if sqp:
+        qk = jnp.pad(qk, ((0, 0), (0, sqp), (0, 0)))
+
+    out = flash_attention_pallas_paged(
+        qk, pool_k, pool_v, tbl,
+        scale=scale,
+        causal=causal,
+        window=int(window or 0),
+        softcap=float(softcap or 0.0),
+        q_offsets=offs_bh,
+        q_lens=lens_bh,
+        kv_heads=kv,
+        rep=rep,
+        block_q=bq,
+        interpret=interpret,
+    )
+    out = out[:, :sq, :d]
+    return out.reshape(b, kv, rep, sq, d).transpose(0, 3, 1, 2, 4).reshape(
+        b, sq, h, d
+    )

@@ -141,6 +141,26 @@ def main(argv=None):
         "scores prefill at the matching rate",
     )
     ap.add_argument(
+        "--kv-page-tokens", type=int, default=0, metavar="TOKENS",
+        help="serve the KV cache as fixed-size pages of this many tokens "
+        "(block-paged attention): slots allocate pages on demand instead of "
+        "dense max-len rows, and the planner's Eq. 5 memory term charges "
+        "pages actually resident (0 = dense per-slot rows, the default)",
+    )
+    ap.add_argument(
+        "--no-prefix-sharing", dest="prefix_sharing", action="store_false",
+        help="disable hash-based prefix sharing across paged requests "
+        "(shared prompt prefixes reuse read-only pages, skip their prefill "
+        "chunks, and copy-on-write at first divergence); only meaningful "
+        "with --kv-page-tokens",
+    )
+    ap.add_argument(
+        "--kv-residency", type=float, default=1.0, metavar="FRACTION",
+        help="expected fraction of max-len a sequence actually occupies — "
+        "scales the planner's paged Eq. 5 memory term (1.0 = worst case; "
+        "only meaningful with --kv-page-tokens)",
+    )
+    ap.add_argument(
         "--prompt-len", type=int, default=0, metavar="TOKENS",
         help="expected prompt tokens per request: lets the throughput "
         "planner charge each request's chunked-prefill work when scoring "
@@ -199,6 +219,9 @@ def main(argv=None):
         prefill_chunk=args.prefill_chunk or None,
         prompt_len=args.prompt_len,
         fused_prefill=args.fused_prefill,
+        kv_page_tokens=args.kv_page_tokens or None,
+        prefix_sharing=args.prefix_sharing,
+        kv_residency=args.kv_residency,
     )
     if args.replicas != "1":
         return _serve_replicas(args, cfg, params, cluster, plan_cfg)
@@ -227,6 +250,11 @@ def main(argv=None):
         "prefill_chunk="
         f"{engine.prefill_chunk if engine._chunked_prefill_on() else 'blocking'}"
         f" step={'fused' if engine._fused_on() else 'interleaved'}"
+        + (
+            f" kv=paged({engine.kv_page_tokens}"
+            f"{',shared' if engine.prefix_sharing else ''})"
+            if engine.kv_page_tokens else " kv=dense"
+        )
     )
     t0 = time.perf_counter()
     reqs = [
@@ -241,6 +269,8 @@ def main(argv=None):
     rejected = sum(r.rejected for r in reqs)
     print(f"[serve] {toks} tokens in {dt:.2f}s ({toks/dt:.1f} tok/s)"
           + (f", {rejected} rejected by KV admission" if rejected else ""))
+    if engine._kv_pool is not None:
+        print(f"[serve] kv pool: {engine._kv_pool.stats()}")
     print(f"[serve] straggler report: {engine.straggler_report()['stragglers']}")
 
     # ---- surface the adaptation loop's decisions -------------------------

@@ -122,13 +122,19 @@ def _cross_kv(layer_p, memory, cfg) -> Tuple[jax.Array, jax.Array]:
 
 
 def _dec_block(layer_p, x, cfg, positions, memory_kv, self_cache, cache_pos,
-               q_lens=None):
+               q_lens=None, page_table=None):
+    # paged self-attn KV: per-layer page pools + one shared [B, pps] table
+    # (cross K/V stays dense — it is encoder-length, written once, never grows)
+    if self_cache is not None and page_table is not None:
+        self_cache = dict(self_cache, table=page_table)
     h = rmsnorm(x, layer_p["ln_self"])
     out, new_cache = multihead_attention(
         layer_p["self_attn"], h, cfg,
         positions=positions, kv_cache=self_cache, cache_pos=cache_pos,
         q_lens=q_lens,
     )
+    if new_cache is not None and "table" in new_cache:
+        new_cache = {"k": new_cache["k"], "v": new_cache["v"]}
     x = x + out
     h = rmsnorm(x, layer_p["ln_cross"])
     # cross-attn sees the full encoder memory regardless of row length;
@@ -143,7 +149,8 @@ def _dec_block(layer_p, x, cfg, positions, memory_kv, self_cache, cache_pos,
 
 
 def decode_stack(params, tokens, cfg, memory=None, cross_cache=None,
-                 self_cache=None, cache_pos=None, q_lens=None):
+                 self_cache=None, cache_pos=None, q_lens=None,
+                 page_table=None):
     x = jnp.take(params["embed"], tokens, axis=0)
     x = shard_hint(x, "batch", None, "embed")
     b, s = tokens.shape
@@ -164,7 +171,7 @@ def decode_stack(params, tokens, cfg, memory=None, cross_cache=None,
                 layer_p, sc = xs[0], xs[1]
                 kv = _cross_kv(layer_p, memory, cfg)
             x, nc = _dec_block(layer_p, x, cfg, positions, kv, sc, cache_pos,
-                               q_lens)
+                               q_lens, page_table)
             return x, nc
 
         body_fn = jax.checkpoint(body) if cfg.remat else body
@@ -186,7 +193,8 @@ def decode_stack(params, tokens, cfg, memory=None, cross_cache=None,
                 if self_cache is not None
                 else None
             )
-            x, nc = dec_fn(layer_p, x, cfg, positions, kv, sc, cache_pos, q_lens)
+            x, nc = dec_fn(layer_p, x, cfg, positions, kv, sc, cache_pos,
+                           q_lens, page_table)
             if nc is not None:
                 new_k.append(nc["k"])
                 new_v.append(nc["v"])
@@ -214,6 +222,15 @@ def init_self_cache(cfg: ModelConfig, batch: int, max_len: int):
     hd = cfg.resolved_head_dim
     dt = _dtype(cfg)
     shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def init_paged_self_cache(cfg: ModelConfig, num_pages: int, page_tokens: int):
+    """Paged decoder self-attention cache: per-layer page pools (last page is
+    the reserved trash page); the page table is passed per call."""
+    hd = cfg.resolved_head_dim
+    dt = _dtype(cfg)
+    shape = (cfg.n_layers, num_pages + 1, page_tokens, cfg.n_kv_heads, hd)
     return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
 
 
@@ -245,11 +262,19 @@ def prefill_chunked(
     max_len: Optional[int] = None,
     *,
     chunk: int = 64,
+    self_cache=None,
+    page_table=None,
+    start: int = 0,
 ):
     """Chunked decoder prefill: the encoder runs once (cross K/V cached as
     in :func:`prefill`), then the decoder prompt is teacher-forced in
     ``chunk``-token pieces with the self-attention cache carried across
-    boundaries — greedy-token-identical to the whole-prompt pass."""
+    boundaries — greedy-token-identical to the whole-prompt pass.
+
+    ``self_cache``/``page_table`` continue an existing (possibly paged)
+    self-attention cache; ``start`` skips prompt tokens whose KV the mapped
+    pages already hold (prefix reuse — sound here because cross K/V and the
+    decoder self cache are the decoder's only state)."""
     if chunk <= 0:
         raise ValueError(f"chunk must be > 0, got {chunk}")
     memory = encode(params, batch["frames"], cfg)
@@ -261,32 +286,41 @@ def prefill_chunked(
         cv = jnp.stack([v for _, v in kvs])
     cross_cache = {"k": ck, "v": cv}
     b, s = batch["tokens"].shape
-    self_cache = init_self_cache(cfg, b, max_len or s)
+    if not 0 <= start < s:
+        raise ValueError(f"start must be in [0, {s}), got {start}")
+    if self_cache is None:
+        self_cache = init_self_cache(cfg, b, max_len or s)
     logits = None
-    off = 0
+    off = start
     while off < s:
         n = min(chunk, s - off)
         logits, self_cache = decode_stack(
             params, batch["tokens"][:, off : off + n], cfg,
             cross_cache=cross_cache, self_cache=self_cache,
             cache_pos=jnp.asarray(off, jnp.int32),
+            page_table=page_table,
         )
         off += n
     return logits[:, -1], {"self": self_cache, "cross": cross_cache}
 
 
-def decode_step(params, token_batch, caches, cache_pos, cfg: ModelConfig):
+def decode_step(
+    params, token_batch, caches, cache_pos, cfg: ModelConfig, *, page_table=None
+):
     """One-token decoder step; ``cache_pos`` is a scalar or a ``(B,)`` int32
     vector (ragged batch — per-row self-attention cache depth)."""
     logits, new_self = decode_stack(
         params, token_batch["tokens"], cfg,
         cross_cache=caches["cross"], self_cache=caches["self"],
-        cache_pos=cache_pos,
+        cache_pos=cache_pos, page_table=page_table,
     )
     return logits[:, -1], {"self": new_self, "cross": caches["cross"]}
 
 
-def fused_step(params, token_batch, caches, cache_pos, q_lens, cfg: ModelConfig):
+def fused_step(
+    params, token_batch, caches, cache_pos, q_lens, cfg: ModelConfig,
+    *, page_table=None,
+):
     """One FUSED mixed prefill/decode decoder step (see
     :func:`repro.models.transformer.fused_step`): tokens [B, S], per-row
     ``(cache_pos, q_lens)``; returns the FULL logits [B, S, V] and new caches."""
@@ -295,5 +329,6 @@ def fused_step(params, token_batch, caches, cache_pos, q_lens, cfg: ModelConfig)
         cross_cache=caches["cross"], self_cache=caches["self"],
         cache_pos=jnp.asarray(cache_pos, jnp.int32),
         q_lens=jnp.asarray(q_lens, jnp.int32),
+        page_table=page_table,
     )
     return logits, {"self": new_self, "cross": caches["cross"]}

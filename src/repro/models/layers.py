@@ -223,6 +223,56 @@ def _chunked_attention(q, k, v, q_pos, k_pos, *, causal, window, cap, scale, chu
     return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
 
 
+def _paged_update(pool_k, pool_v, table, k, v, cache_pos, q_lens):
+    """Scatter this call's new K/V into the page pool through ``table``.
+
+    Flat-pool indexing: token ``i`` of row ``b`` lands at physical position
+    ``table[b, pos // P] * P + pos % P`` with ``pos = cache_pos[b] + i``.
+    Rows/tokens outside their valid span (``i ≥ q_lens[b]``), and any
+    unmapped table entry, are redirected to the reserved TRASH page (the
+    pool's last page) — the scatter can therefore never corrupt a real
+    page, which is what lets idle rows of a fused mixed batch ride along.
+    """
+    b, sq = k.shape[0], k.shape[1]
+    np1, page_tokens = pool_k.shape[0], pool_k.shape[1]
+    pages_per_slot = table.shape[1]
+    trash = np1 - 1
+    cp = jnp.broadcast_to(jnp.asarray(cache_pos, jnp.int32), (b,))
+    ql = (
+        jnp.full((b,), sq, jnp.int32)
+        if q_lens is None
+        else q_lens.astype(jnp.int32)
+    )
+    ii = jnp.arange(sq, dtype=jnp.int32)[None, :]
+    pos = cp[:, None] + ii                                     # [B, Sq]
+    valid = (ii < ql[:, None]) & (pos < pages_per_slot * page_tokens)
+    pidx = jnp.clip(pos // page_tokens, 0, pages_per_slot - 1)
+    page = jnp.take_along_axis(table, pidx, axis=1)            # [B, Sq]
+    page = jnp.where(valid & (page >= 0), page, trash)
+    dest = (page * page_tokens + pos % page_tokens).reshape(-1)
+    flat = (np1 * page_tokens,) + pool_k.shape[2:]
+    item = (b * sq,) + pool_k.shape[2:]
+    pk = pool_k.reshape(flat).at[dest].set(k.astype(pool_k.dtype).reshape(item))
+    pv = pool_v.reshape(flat).at[dest].set(v.astype(pool_v.dtype).reshape(item))
+    return pk.reshape(pool_k.shape), pv.reshape(pool_v.shape)
+
+
+def _paged_view(pool, table):
+    """Gather the logical ``[B, max_len, KV, D]`` cache view out of the page
+    pool (the naive/chunked reference read path; the pallas kernel reads
+    through the table directly and never materializes this).  Unmapped
+    entries resolve to the trash page — garbage, but always causally masked
+    (they sit beyond every row's written span)."""
+    np1, page_tokens = pool.shape[0], pool.shape[1]
+    trash = np1 - 1
+    pages_per_slot = table.shape[1]
+    t = jnp.arange(pages_per_slot * page_tokens, dtype=jnp.int32)
+    pages = jnp.where(table >= 0, table, trash)
+    src = pages[:, t // page_tokens] * page_tokens + (t % page_tokens)[None, :]
+    flat = pool.reshape((np1 * page_tokens,) + pool.shape[2:])
+    return jnp.take(flat, src, axis=0)                         # [B, L, KV, D]
+
+
 def multihead_attention(
     p: Params,
     x: jax.Array,                     # [B, Sq, D_model]
@@ -275,7 +325,19 @@ def multihead_attention(
     q = shard_hint(q, "batch", None, "heads", None)
 
     new_cache = None
-    if kv_cache is not None and cross_kv is None:
+    # paged cache: {"k","v": [num_pages+1, P, KV, hd] pool, "table": [B, pps]}
+    paged = kv_cache is not None and cross_kv is None and "table" in kv_cache
+    if paged:
+        pool_k, pool_v, table = kv_cache["k"], kv_cache["v"], kv_cache["table"]
+        cp = cache_pos if cache_pos is not None else 0
+        pool_k, pool_v = _paged_update(pool_k, pool_v, table, k, v, cp, q_lens)
+        new_cache = {"k": pool_k, "v": pool_v, "table": table}
+        # logical cache depth = pages_per_slot · page_tokens; reads beyond a
+        # row's written span hit stale/trash data that the causal-vs-q_pos
+        # mask already zeroes, same as unwritten dense rows
+        k_pos1d = jnp.arange(table.shape[1] * pool_k.shape[1])
+        causal = True
+    elif kv_cache is not None and cross_kv is None:
         # decode / incremental prefill: write new kv at cache_pos
         kcache, vcache = kv_cache["k"], kv_cache["v"]
         if ragged and q_lens is not None:
@@ -319,7 +381,7 @@ def multihead_attention(
         if causal is None:
             causal = cross_kv is None
 
-    g = k.shape[2]
+    g = pool_k.shape[2] if paged else k.shape[2]
     n_rep = cfg.n_heads // g
     qg = q.reshape(b, sq, g, n_rep, hd)   # GQA grouping — KV is never repeated
 
@@ -339,13 +401,24 @@ def multihead_attention(
         else:
             if static_window is not None and static_window <= 0:
                 static_window = None
+    if paged and impl != "pallas":
+        # naive/chunked reference read path: gather the logical [B, L, KV, hd]
+        # view out of the pool once, then reuse the dense mask logic unchanged
+        k = _paged_view(pool_k, table)
+        v = _paged_view(pool_v, table)
     if impl == "pallas":
         from repro.kernels.flash_attention import ops as fa_ops
 
-        out = fa_ops.flash_attention(
-            q, k, v, q_pos, k_pos1d, q_lens, causal=causal,
-            window=static_window, softcap=cfg.attn_softcap, scale=scale,
-        )
+        if paged:
+            out = fa_ops.flash_attention_paged(
+                q, pool_k, pool_v, table, q_pos, q_lens, causal=causal,
+                window=static_window, softcap=cfg.attn_softcap, scale=scale,
+            )
+        else:
+            out = fa_ops.flash_attention(
+                q, k, v, q_pos, k_pos1d, q_lens, causal=causal,
+                window=static_window, softcap=cfg.attn_softcap, scale=scale,
+            )
     elif impl == "chunked" and k.shape[1] > cfg.attn_chunk and sq > 1:
         out = _chunked_attention(
             qg, k, v, q_pos, k_pos1d,

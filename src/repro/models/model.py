@@ -33,6 +33,11 @@ class Model:
     # compiled program serves the whole serving step
     fused_step: Callable[..., Tuple[jax.Array, Any]]
     init_cache: Callable[..., Any]
+    # paged KV: (num_pages, page_tokens, batch) → per-layer page pools (last
+    # page reserved as trash).  decode_step/fused_step/prefill_chunked accept
+    # a page_table=[B, pages_per_slot] kwarg that switches reads/writes to
+    # the pools; the table itself is host-owned (serving.kv_pool.KVPool)
+    init_paged_cache: Optional[Callable[..., Any]] = None
 
 
 def build_model(cfg: ModelConfig) -> Model:
@@ -42,17 +47,23 @@ def build_model(cfg: ModelConfig) -> Model:
             init=lambda key: encdec.init_params(key, cfg),
             train_forward=lambda p, b: encdec.train_forward(p, b, cfg),
             prefill=lambda p, b, max_len=None: encdec.prefill(p, b, cfg, max_len),
-            prefill_chunked=lambda p, b, max_len=None, chunk=64: encdec.prefill_chunked(
-                p, b, cfg, max_len, chunk=chunk
+            prefill_chunked=lambda p, b, max_len=None, chunk=64, **kw: encdec.prefill_chunked(
+                p, b, cfg, max_len, chunk=chunk, **kw
             ),
-            decode_step=lambda p, t, c, pos: encdec.decode_step(p, t, c, pos, cfg),
-            fused_step=lambda p, t, c, pos, qlens: encdec.fused_step(
-                p, t, c, pos, qlens, cfg
+            decode_step=lambda p, t, c, pos, page_table=None: encdec.decode_step(
+                p, t, c, pos, cfg, page_table=page_table
+            ),
+            fused_step=lambda p, t, c, pos, qlens, page_table=None: encdec.fused_step(
+                p, t, c, pos, qlens, cfg, page_table=page_table
             ),
             # cross cache length = encoder frame count (same seq grid here)
             init_cache=lambda b, s: {
                 "self": encdec.init_self_cache(cfg, b, s),
                 "cross": encdec.init_self_cache(cfg, b, s),
+            },
+            init_paged_cache=lambda num_pages, page_tokens, b=1: {
+                "self": encdec.init_paged_self_cache(cfg, num_pages, page_tokens),
+                "cross": None,  # computed at prefill from the encoder memory
             },
         )
     return Model(
@@ -60,14 +71,19 @@ def build_model(cfg: ModelConfig) -> Model:
         init=lambda key: transformer.init_params(key, cfg),
         train_forward=lambda p, b: transformer.train_forward(p, b, cfg),
         prefill=lambda p, b, max_len=None: transformer.prefill(p, b, cfg, max_len),
-        prefill_chunked=lambda p, b, max_len=None, chunk=64: transformer.prefill_chunked(
-            p, b, cfg, max_len, chunk=chunk
+        prefill_chunked=lambda p, b, max_len=None, chunk=64, **kw: transformer.prefill_chunked(
+            p, b, cfg, max_len, chunk=chunk, **kw
         ),
-        decode_step=lambda p, t, c, pos: transformer.decode_step(p, t, c, pos, cfg),
-        fused_step=lambda p, t, c, pos, qlens: transformer.fused_step(
-            p, t, c, pos, qlens, cfg
+        decode_step=lambda p, t, c, pos, page_table=None: transformer.decode_step(
+            p, t, c, pos, cfg, page_table=page_table
+        ),
+        fused_step=lambda p, t, c, pos, qlens, page_table=None: transformer.fused_step(
+            p, t, c, pos, qlens, cfg, page_table=page_table
         ),
         init_cache=lambda b, s: transformer.init_cache(cfg, b, s),
+        init_paged_cache=lambda num_pages, page_tokens, b=1: transformer.init_paged_cache(
+            cfg, b, num_pages, page_tokens
+        ),
     )
 
 

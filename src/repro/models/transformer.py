@@ -203,6 +203,44 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
     }
 
 
+def init_paged_cache(
+    cfg: ModelConfig, batch: int, num_pages: int, page_tokens: int
+) -> Params:
+    """Paged-KV cache: per-layer physical page pools ``[num_pages+1, P, KV,
+    hd]`` (the +1 is the reserved TRASH page absorbing masked/out-of-range
+    writes).  The per-slot page table is NOT part of this pytree — it is
+    host-owned (``serving.kv_pool.KVPool``) and rides into each forward call
+    as the ``page_table`` operand, so prefix-shared pages can be remapped
+    between steps without touching device pools.
+
+    SSM recurrent state is not paged (it is O(1) per slot, not O(seq));
+    the hybrid family pages only its shared-attention KV."""
+    dt = _dtype(cfg)
+    hd = cfg.resolved_head_dim
+    pool_shape = (num_pages + 1, page_tokens, cfg.n_kv_heads, hd)
+
+    if cfg.family == "ssm":
+        return init_cache(cfg, batch, 0)
+    if cfg.family == "hybrid":
+        st = mamba2_init_state(cfg, batch, dt)
+        n_shared = cfg.n_layers // cfg.shared_attn_every
+        return {
+            "mamba": jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape), st
+            ),
+            "attn": {
+                "k": jnp.zeros((n_shared,) + pool_shape, dt),
+                "v": jnp.zeros((n_shared,) + pool_shape, dt),
+            },
+        }
+    return {
+        "layers": {
+            "k": jnp.zeros((cfg.n_layers,) + pool_shape, dt),
+            "v": jnp.zeros((cfg.n_layers,) + pool_shape, dt),
+        }
+    }
+
+
 # --------------------------------------------------------------------------
 # forward passes
 # --------------------------------------------------------------------------
@@ -239,16 +277,27 @@ def _logits_out(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     return shard_hint(logits, "batch", None, "vocab")
 
 
-def _dense_stack(params, x, cfg, positions, caches, cache_pos, q_lens=None):
+def _dense_stack(
+    params, x, cfg, positions, caches, cache_pos, q_lens=None, page_table=None
+):
     """Scan (or loop) over transformer layers; returns (x, new_caches, aux)."""
     windows = _layer_windows(cfg)
 
     def one(x, layer_p, window, cache):
-        return block_apply(
+        # paged KV: the table is one [B, pages_per_slot] array shared by all
+        # layers (each layer has its own pool, same page ids) — inject it at
+        # the per-layer cache dict, strip it from the per-layer result so the
+        # scan carry / stacked pytree stays {"k","v"}
+        if cache is not None and page_table is not None:
+            cache = dict(cache, table=page_table)
+        x, nc, aux = block_apply(
             layer_p, x, cfg,
             positions=positions, window=window,
             kv_cache=cache, cache_pos=cache_pos, q_lens=q_lens,
         )
+        if nc is not None and "table" in nc:
+            nc = {"k": nc["k"], "v": nc["v"]}
+        return x, nc, aux
 
     if cfg.scan_layers:
         def body(x, xs):
@@ -330,7 +379,10 @@ def _ssm_stack(params, x, cfg, caches, cache_pos=None, q_lens=None):
     return x, {"layers": stacked}
 
 
-def _hybrid_stack(params, x, x_embed, cfg, positions, caches, cache_pos, q_lens=None):
+def _hybrid_stack(
+    params, x, x_embed, cfg, positions, caches, cache_pos, q_lens=None,
+    page_table=None,
+):
     """Zamba2: mamba trunk in segments; shared attn block every N layers."""
     every = cfg.shared_attn_every
     n_shared = cfg.n_layers // every
@@ -381,6 +433,8 @@ def _hybrid_stack(params, x, x_embed, cfg, positions, caches, cache_pos, q_lens=
             if cont or caches is not None
             else None
         )
+        if cache_i is not None and page_table is not None:
+            cache_i["table"] = page_table
         big = jnp.asarray(1 << 30, jnp.int32)
         u, nc, _ = block_apply(
             params["shared_block"], u, cfg,
@@ -412,6 +466,9 @@ def forward(
     cache_pos: Optional[jax.Array] = None,
     q_lens: Optional[jax.Array] = None,  # [B] valid tokens per row (fused
                                          # mixed prefill/decode batch)
+    page_table: Optional[jax.Array] = None,  # [B, pages_per_slot] int32 —
+                                             # paged-KV page table (−1 =
+                                             # unmapped); caches hold pools
 ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     """Returns (logits [B,S,V], new_caches, aux_loss)."""
     x, positions = _embed_in(params, batch, cfg)
@@ -437,11 +494,11 @@ def forward(
         if caches is None:
             caches = init_cache(cfg, x.shape[0], x.shape[1])
         x, new_caches = _hybrid_stack(
-            params, x, x, cfg, positions, caches, cache_pos, q_lens
+            params, x, x, cfg, positions, caches, cache_pos, q_lens, page_table
         )
     else:
         x, new_caches, aux = _dense_stack(
-            params, x, cfg, positions, caches, cache_pos, q_lens
+            params, x, cfg, positions, caches, cache_pos, q_lens, page_table
         )
     logits = _logits_out(params, x, cfg)
     return logits, new_caches, aux
@@ -482,6 +539,9 @@ def prefill_chunked(
     max_len: Optional[int] = None,
     *,
     chunk: int = 64,
+    caches: Optional[Params] = None,
+    page_table: Optional[jax.Array] = None,
+    start: int = 0,
 ):
     """Chunked prefill: run the prompt in ``chunk``-token pieces, carrying
     the caches across chunk boundaries — greedy-token-identical to
@@ -493,17 +553,26 @@ def prefill_chunked(
     whole-prompt pass), SSM/hybrid thread the recurrent ssm state and the
     causal-conv tails (see :func:`repro.models.ssm.mamba2_block`).  This is
     the unit the serving engine's interleaved prefill state machine
-    executes between ragged decode steps."""
+    executes between ragged decode steps.
+
+    ``caches``/``page_table`` continue an existing (possibly paged) cache
+    instead of allocating dense rows; ``start`` skips the first ``start``
+    prompt tokens — only sound when ``caches`` already hold their state
+    (paged prefix reuse: shared pages mapped into this row's table; never
+    sound for SSM/hybrid recurrent state, which pages don't capture)."""
     if cfg.frontend in ("patch_stub", "frame_stub"):
         b, s = batch["embeds"].shape[:2]
     else:
         b, s = batch["tokens"].shape
     if chunk <= 0:
         raise ValueError(f"chunk must be > 0, got {chunk}")
+    if not 0 <= start < s:
+        raise ValueError(f"start must be in [0, {s}), got {start}")
     max_len = max_len or s
-    caches = init_cache(cfg, b, max_len)
+    if caches is None:
+        caches = init_cache(cfg, b, max_len)
     logits = None
-    off = 0
+    off = start
     while off < s:
         n = min(chunk, s - off)
         sub = dict(batch)
@@ -513,22 +582,31 @@ def prefill_chunked(
         logits, caches, _ = forward(
             params, sub, cfg, caches=caches,
             cache_pos=jnp.asarray(off, jnp.int32),
+            page_table=page_table,
         )
         off += n
     return logits[:, -1], caches
 
 
-def decode_step(params, token_batch, caches, cache_pos, cfg: ModelConfig):
+def decode_step(
+    params, token_batch, caches, cache_pos, cfg: ModelConfig, *, page_table=None
+):
     """One-token step: token [B,1] (or embeds [B,1,D]); ``cache_pos`` is a
     scalar (all rows at one depth) or a ``(B,)`` int32 vector (ragged batch —
-    per-row KV write index and causal mask over each row's valid length)."""
+    per-row KV write index and causal mask over each row's valid length).
+    ``page_table`` switches the KV write/read to the paged pools in
+    ``caches``."""
     logits, new_caches, _ = forward(
-        params, token_batch, cfg, caches=caches, cache_pos=cache_pos
+        params, token_batch, cfg, caches=caches, cache_pos=cache_pos,
+        page_table=page_table,
     )
     return logits[:, -1], new_caches
 
 
-def fused_step(params, token_batch, caches, cache_pos, q_lens, cfg: ModelConfig):
+def fused_step(
+    params, token_batch, caches, cache_pos, q_lens, cfg: ModelConfig,
+    *, page_table=None,
+):
     """One FUSED mixed prefill/decode step: tokens [B, S] where row b's first
     ``q_lens[b]`` tokens are valid — decode rows carry 1, prefill chunks up to
     S, idle rows 0.  ``cache_pos`` is a (B,) int32 vector of per-row depths.
@@ -540,5 +618,6 @@ def fused_step(params, token_batch, caches, cache_pos, q_lens, cfg: ModelConfig)
         params, token_batch, cfg, caches=caches,
         cache_pos=jnp.asarray(cache_pos, jnp.int32),
         q_lens=jnp.asarray(q_lens, jnp.int32),
+        page_table=page_table,
     )
     return logits, new_caches

@@ -91,6 +91,7 @@ from repro.core.modelgraph import transformer_graph
 from repro.core.milp import PlacementResult
 from repro.core.placement import PlanConfig, plan, replan
 from .adaptation import AdaptationConfig, AdaptationEvent, DeratePolicy
+from .kv_pool import KVPool
 from .stage_executor import StageExecutor, stages_from_placement, stats_from_times
 
 
@@ -260,6 +261,27 @@ class ServingEngine:
             fused = getattr(self.plan_cfg, "fused_prefill", True)
         self.fused = bool(fused)
 
+        # paged KV cache (PlanConfig.kv_page_tokens): fixed-size page pools
+        # per stage device + a host-owned per-slot page table (KVPool), with
+        # optional hash-based prefix sharing.  Paged serving rides the fused
+        # ragged path — every KV write is span-masked through the table, so
+        # the legacy full-row gather/scatter paths never see pools
+        self.kv_page_tokens = getattr(self.plan_cfg, "kv_page_tokens", None)
+        self.prefix_sharing = bool(
+            getattr(self.plan_cfg, "prefix_sharing", True)
+        )
+        if self.kv_page_tokens is not None:
+            self.kv_page_tokens = int(self.kv_page_tokens)
+            if self.kv_page_tokens <= 0:
+                raise ValueError(
+                    f"kv_page_tokens must be positive, got {self.kv_page_tokens}"
+                )
+            if not (self.batching == "ragged" and self.prefill_chunk and self.fused):
+                raise ValueError(
+                    "paged KV (kv_page_tokens) requires ragged batching with "
+                    "chunked + fused prefill"
+                )
+
         # adaptation loop state: the policy owns streaks/hysteresis, the
         # engine owns the applied derate map and the (derated) cost model.
         # With AdaptationConfig.state_path set, a previously persisted
@@ -277,7 +299,7 @@ class ServingEngine:
         self._steps_since_window = 0
 
         self.graph = transformer_graph(cfg, seq_len=max_len, granularity="block")
-        self._cost = CostModel(self.cluster_effective)
+        self._cost = self._make_cost()
         if placement_result is not None:
             # a pre-solved plan (the router hands each replica its slice of
             # the service plan, in THIS engine's cluster indices) — must
@@ -319,6 +341,22 @@ class ServingEngine:
         self._devices_all: Optional[List[Any]] = None  # pre-failure jax devices
 
     # ------------------------------------------------------------------
+    def _make_cost(self) -> CostModel:
+        """Cost model over the effective (derated) cluster, paging-aware:
+        with ``kv_page_tokens`` set, Eq. 5's KV term charges pages actually
+        resident (``ceil(residency · S / P) · P`` tokens per slot) instead
+        of dense ``max_len`` rows — the same accounting ``plan()`` applies,
+        so "score what the engine runs" holds for memory too."""
+        return CostModel(
+            self.cluster_effective,
+            kv_page_tokens=self.kv_page_tokens,
+            kv_seq_tokens=self.max_len if self.kv_page_tokens else None,
+            kv_residency=float(
+                getattr(self.plan_cfg, "kv_residency", 1.0) or 1.0
+            ),
+        )
+
+    # ------------------------------------------------------------------
     def _persist_policy(self):
         """Write the policy's control state to ``state_path`` (when set) so
         an engine restart resumes the learned derates."""
@@ -340,6 +378,19 @@ class ServingEngine:
         )
         self.executor = StageExecutor(self.cfg, self.params, stages)
         self.caches = None  # caches are invalid after a topology change
+        # ...and so is the page pool: every mapping pointed into the old
+        # executor's device pools (re-prefill repopulates — and re-registers
+        # shared prefixes — from scratch)
+        self._kv_pool = (
+            KVPool(
+                self.slots,
+                self.max_len,
+                self.kv_page_tokens,
+                prefix_sharing=self.prefix_sharing,
+            )
+            if self.kv_page_tokens is not None
+            else None
+        )
         # ...and so is any mid-prefill progress: the chunks written so far
         # lived in the old executor's cache rows
         self._prefill_toks: Dict[int, List[int]] = {}
@@ -463,11 +514,24 @@ class ServingEngine:
                     depth = len(head.prompt) + len(head.out_tokens)
                     if pos_set and pos_set != {depth}:
                         break
-                if n_active > 0 and not self._admission_ok(n_active + 1):
+                toks_head = list(head.prompt) + list(head.out_tokens)
+                # paged: the sequence's pages (net of reusable shared-prefix
+                # pages) must be obtainable from the pool — free now or
+                # LRU-evictable — on top of the planner-level Eq. 5 check
+                total_head = min(
+                    len(head.prompt) + int(head.max_new_tokens), self.max_len
+                )
+                pool_ok = self._kv_pool is None or self._kv_pool.can_admit(
+                    toks_head, total_head
+                )
+                if (n_active > 0 and not self._admission_ok(n_active + 1)) or (
+                    n_active > 0 and not pool_ok
+                ):
                     # one more resident KV copy would overflow a planned
-                    # device. (With zero active requests we admit regardless:
-                    # if even one sequence does not fit, holding it forever
-                    # is a livelock, not protection — serve best-effort.)
+                    # device (or the page pool). (With zero active requests we
+                    # admit regardless: if even one sequence does not fit,
+                    # holding it forever is a livelock, not protection —
+                    # serve best-effort.)
                     # A request with generated tokens was ALREADY admitted
                     # once (re-queued by a hot-swap) — never reject it, or
                     # accepted half-served work would be silently discarded
@@ -483,19 +547,28 @@ class ServingEngine:
                 self.active[slot] = req
                 # prompt + out_tokens so a request re-queued by a hot-swap
                 # resumes its greedy decode exactly where it was
-                toks_list = list(req.prompt) + list(req.out_tokens)
+                toks_list = toks_head
                 if self._chunked_prefill_on() and toks_list:
                     # interleaved prefill: only REGISTER the work here — the
                     # prompt is consumed one prefill_chunk per engine step
                     # (between decode batches) by _advance_prefill, directly
                     # into this slot's cache row
-                    if self.caches is None:
-                        self.caches = self.executor.init_caches(
-                            self.slots, self.max_len
+                    self._ensure_caches()
+                    reuse = 0
+                    if self._kv_pool is not None:
+                        # map pages; shared-prefix hits skip their prefill
+                        # chunks (reuse), a partially matched page is COW'd
+                        # on-device before any write can land in it
+                        reuse, copies = self._kv_pool.alloc_sequence(
+                            slot, toks_list, total_head
                         )
+                        if copies:
+                            self.caches = self.executor.copy_pages(
+                                self.caches, copies
+                            )
                     self._prefill_toks[slot] = toks_list
-                    self._prefill_done[slot] = 0
-                    self.slot_pos[slot] = 0
+                    self._prefill_done[slot] = reuse
+                    self.slot_pos[slot] = reuse
                     continue
                 # blocking whole-prompt prefill (lockstep baseline, or
                 # prefill_chunk=None): batch-1 prefill into the slot's row
@@ -509,6 +582,18 @@ class ServingEngine:
                 # (EOS, or a re-queued request one token short of budget) —
                 # retire NOW or a decode step would overshoot the budget
                 self._maybe_retire(slot, nxt)
+
+    def _ensure_caches(self):
+        """Lazily allocate device caches: paged pools (+ trash page) when a
+        KV pool is configured, dense ``(slots, max_len)`` rows otherwise."""
+        if self.caches is not None:
+            return
+        if self._kv_pool is not None:
+            self.caches = self.executor.init_paged_caches(
+                self._kv_pool.num_pages, self._kv_pool.page_tokens
+            )
+        else:
+            self.caches = self.executor.init_caches(self.slots, self.max_len)
 
     def _chunked_prefill_on(self) -> bool:
         """Interleaved chunked prefill is a ragged-batching feature: the
@@ -636,6 +721,10 @@ class ServingEngine:
             # decode then writes (and attends) at its row's position 0,
             # which the next admission's full-row prefill overwrites anyway
             self.slot_pos[slot] = 0
+            if self._kv_pool is not None:
+                # deref the slot's pages; registered prefix pages park in
+                # the LRU ring for future sharers, private pages free
+                self._kv_pool.free_slot(slot)
             self._record_finished(req)
             return True
         return False
@@ -745,8 +834,7 @@ class ServingEngine:
         pf_slots = sorted(self._prefill_toks)
         if not idx and not pf_slots:
             return 0
-        if self.caches is None:
-            self.caches = self.executor.init_caches(self.slots, self.max_len)
+        self._ensure_caches()
         s = self.prefill_chunk if pf_slots else 1
         tokens = np.zeros((self.slots, s), dtype=np.int32)
         q_lens = np.zeros(self.slots, dtype=np.int32)
@@ -771,6 +859,11 @@ class ServingEngine:
             kind="fused",
             q_lens=jnp.asarray(q_lens),
             fused_decode_frac=self._fused_decode_frac(len(pf_slots)),
+            page_table=(
+                self._kv_pool.table_array()
+                if self._kv_pool is not None
+                else None
+            ),
         )
         nxt = np.asarray(jnp.argmax(logits, axis=-1))      # [slots, S]
         for i in idx:
@@ -787,6 +880,11 @@ class ServingEngine:
                 del self._prefill_toks[i]
                 del self._prefill_done[i]
                 req = self.active[i]
+                if self._kv_pool is not None:
+                    # prompt KV is resident: register its page-aligned
+                    # prefix so later requests can share it (BEFORE any
+                    # retirement — the pages then park in the LRU, reusable)
+                    self._kv_pool.commit_prefix(i, req.prompt)
                 # next token from the last REAL prompt row of the chunk
                 tok = int(nxt[i, n - 1])
                 req.out_tokens.append(tok)
@@ -918,7 +1016,7 @@ class ServingEngine:
         self.cluster_effective = (
             self.cluster.with_derate(self.derate) if self.derate else self.cluster
         )
-        self._cost = CostModel(self.cluster_effective)
+        self._cost = self._make_cost()
         alive = [i for i in range(self.cluster.k) if i not in self.failed_devices]
         # executor works over a compacted device list aligned with `alive`
         if self._devices_all is None:

@@ -128,7 +128,7 @@ class StageExecutor:
         st = self.stages[si]
         windows = [int(self._windows[i]) for i in st.layer_ids]
 
-        def run(sp, x, positions, caches, cache_pos, q_lens=None):
+        def run(sp, x, positions, caches, cache_pos, q_lens=None, table=None):
             new_caches = []
             if st.first:
                 tokens = x
@@ -137,6 +137,10 @@ class StageExecutor:
                     x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
             for j, layer_p in enumerate(sp["layers"]):
                 cache_j = caches[j] if caches is not None else None
+                if cache_j is not None and table is not None:
+                    # paged KV: one [B, pages_per_slot] table shared by every
+                    # layer of every stage; pools stay per-layer per-stage
+                    cache_j = dict(cache_j, table=table)
                 x, nc, _ = transformer.block_apply(
                     layer_p, x, cfg,
                     positions=positions,
@@ -145,6 +149,8 @@ class StageExecutor:
                     cache_pos=cache_pos,
                     q_lens=q_lens,
                 )
+                if nc is not None and "table" in nc:
+                    nc = {"k": nc["k"], "v": nc["v"]}
                 new_caches.append(nc)
             if st.last:
                 x = rmsnorm(x, sp["ln_final"])
@@ -176,6 +182,42 @@ class StageExecutor:
             ])
         return caches
 
+    def init_paged_caches(self, num_pages: int, page_tokens: int):
+        """Paged-KV pools: per stage, per layer, ``[num_pages+1, P, KV, hd]``
+        on that stage's device (the +1 is the reserved trash page).  The
+        page table is host-owned (``serving.kv_pool.KVPool``) and rides into
+        :meth:`forward` as ``page_table`` each step."""
+        hd = self.cfg.resolved_head_dim
+        dt = jnp.dtype(self.cfg.dtype)
+        shape = (num_pages + 1, page_tokens, self.cfg.n_kv_heads, hd)
+        caches = []
+        for st in self.stages:
+            caches.append([
+                {
+                    "k": jax.device_put(jnp.zeros(shape, dt), st.device),
+                    "v": jax.device_put(jnp.zeros(shape, dt), st.device),
+                }
+                for _ in st.layer_ids
+            ])
+        return caches
+
+    def copy_pages(self, caches, pairs):
+        """Copy-on-write support: materialize page copies ``(src, dst)`` in
+        every stage's every layer pool (K and V).  Called at admission when a
+        request's prompt diverges inside a shared prefix page; the table
+        update itself is host-side (KVPool)."""
+        if not pairs:
+            return caches
+        src = jnp.asarray([s for s, _ in pairs], jnp.int32)
+        dst = jnp.asarray([d for _, d in pairs], jnp.int32)
+        out = []
+        for st_caches in caches:
+            out.append([
+                {key: c[key].at[dst].set(c[key][src]) for key in ("k", "v")}
+                for c in st_caches
+            ])
+        return out
+
     def forward(
         self,
         tokens: jax.Array,            # [B, S] (prefill) or [B, 1] (decode)
@@ -194,6 +236,8 @@ class StageExecutor:
                                       # forward records a ("decode", dt·f) AND
                                       # a ("prefill", dt·(1−f)) sample so the
                                       # calibrator's windows stay clean
+        page_table=None,              # [B, pages_per_slot] int32 — paged-KV
+                                      # table (caches hold page pools)
     ):
         b, s = tokens.shape
         if kind is None:
@@ -210,6 +254,7 @@ class StageExecutor:
         )
         positions = jnp.broadcast_to(positions, (b, s))
         ql = None if q_lens is None else jnp.asarray(q_lens, jnp.int32)
+        tbl = None if page_table is None else jnp.asarray(page_table, jnp.int32)
         x = tokens
         new_caches = []
         for si, st in enumerate(self.stages):
@@ -219,7 +264,9 @@ class StageExecutor:
             if fn is None:
                 fn = self._fns[si] = self._stage_fn(si)
             st_caches = caches[si] if caches is not None else None
-            x, nc = fn(self.stage_params[si], x, positions, st_caches, cp, ql)
+            x, nc = fn(
+                self.stage_params[si], x, positions, st_caches, cp, ql, tbl
+            )
             x.block_until_ready()
             dt = time.perf_counter() - t0
             if kind == "fused":

@@ -7,8 +7,8 @@ Usage in test modules::
 
 The fallback supports exactly the subset this repo's tests use —
 ``@hypothesis.settings(max_examples=..., deadline=...)`` stacked on
-``@hypothesis.given(name=st.integers(a, b), ...)`` with ``st.integers`` and
-``st.floats`` strategies.  It draws ``max_examples`` pseudo-random examples
+``@hypothesis.given(name=st.integers(a, b), ...)`` with ``st.integers``,
+``st.floats`` and ``st.sampled_from`` strategies.  It draws ``max_examples`` pseudo-random examples
 from a per-test seed derived via crc32 of the test name (stable across runs
 and interpreters, unlike ``hash()``), so failures reproduce.  It does NOT
 shrink counterexamples; install the real package (requirements-dev.txt) for
@@ -45,6 +45,10 @@ except ImportError:
     def _floats(min_value, max_value):
         return _Strategy(lambda rng: rng.uniform(min_value, max_value))
 
+    def _sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: rng.choice(elements))
+
     def _given(**strategies):
         def deco(fn):
             @functools.wraps(fn)
@@ -77,6 +81,8 @@ except ImportError:
         return deco
 
     hypothesis = types.SimpleNamespace(given=_given, settings=_settings)
-    st = types.SimpleNamespace(integers=_integers, floats=_floats)
+    st = types.SimpleNamespace(
+        integers=_integers, floats=_floats, sampled_from=_sampled_from
+    )
 
 __all__ = ["HAVE_HYPOTHESIS", "hypothesis", "st"]
