@@ -356,33 +356,53 @@ class DerateCalibrator:
     the current cost model says", so the policy divides the device's speed
     factor by r.
 
+    A stage's wall-clock sample also carries its INCOMING inter-stage
+    transfer (the executor times ``device_put`` inside the receiving
+    stage), so a degraded channel reads as a slow downstream stage.  The
+    caller therefore splits each stage sample by the cost model's predicted
+    compute/comm shares: the compute share feeds :meth:`add_stage_sample`
+    (device evidence), the comm share feeds :meth:`add_channel_sample`
+    (channel evidence keyed by the ``(src, dst)`` device pair) — which is
+    what lets the derate policy derate the CHANNEL on comm-heavy stage
+    boundaries instead of smearing correlated drift over both endpoint
+    devices.
+
     Usage::
 
         cal = DerateCalibrator()
         cal.add_stage_sample(device=2, ratio=2.1, class_weights={"block": 1.0})
         cal.device_ratios()       # {2: 2.1}
         cal.op_class_ratios(2)    # {"block": 2.1}
+        cal.add_channel_sample(1, 2, ratio=8.0, weight=0.9)
+        cal.channel_ratios()      # {(1, 2): 8.0}
     """
 
     def __init__(self) -> None:
         # (device, op_class) -> [sum of w*log(ratio), sum of w]
         self._acc: Dict[tuple, list] = {}
+        # (src, dst) -> [sum of w*log(ratio), sum of w]
+        self._chan: Dict[tuple, list] = {}
 
     def add_stage_sample(
         self,
         device: int,
         ratio: float,
         class_weights: Mapping[str, float],
+        *,
+        weight: float = 1.0,
     ) -> None:
         """Record one stage observation.
 
         ``ratio`` is the stage's observed/predicted time (already normalized
         against the fleet baseline by the caller so absolute cost-model error
         cancels); ``class_weights`` maps op class → predicted-time share of
-        the stage (weights are normalized internally).  Non-finite or
-        non-positive ratios are ignored.
+        the stage (weights are normalized internally).  ``weight`` scales
+        the whole sample's evidence mass — the caller passes the stage's
+        predicted COMPUTE share when the comm share went to
+        :meth:`add_channel_sample`, so one wall-clock sample never counts
+        twice.  Non-finite or non-positive ratios are ignored.
         """
-        if not (ratio > 0.0 and np.isfinite(ratio)):
+        if not (ratio > 0.0 and np.isfinite(ratio)) or weight <= 0.0:
             return
         total = sum(w for w in class_weights.values() if w > 0)
         if total <= 0:
@@ -391,8 +411,34 @@ class DerateCalibrator:
             if w <= 0:
                 continue
             acc = self._acc.setdefault((device, cls), [0.0, 0.0])
-            acc[0] += (w / total) * float(np.log(ratio))
-            acc[1] += w / total
+            acc[0] += weight * (w / total) * float(np.log(ratio))
+            acc[1] += weight * (w / total)
+
+    def add_channel_sample(
+        self, src: int, dst: int, ratio: float, *, weight: float = 1.0
+    ) -> None:
+        """Record one channel observation: the ``(src, dst)`` inter-stage
+        transfer ran ``ratio``× its predicted time.  ``weight`` is the
+        stage's predicted comm share (the evidence mass this sample carries
+        — the compute share went to :meth:`add_stage_sample`)."""
+        if not (ratio > 0.0 and np.isfinite(ratio)) or weight <= 0.0:
+            return
+        if src == dst:
+            return
+        acc = self._chan.setdefault((int(src), int(dst)), [0.0, 0.0])
+        acc[0] += weight * float(np.log(ratio))
+        acc[1] += weight
+
+    def channel_ratios(self) -> Dict[tuple, float]:
+        """(src, dst) → observed/predicted transfer-time ratio (weighted
+        log-space geometric mean); ratio r > 1 means the channel moves
+        bytes r× slower than the cost model says, so the derate policy
+        divides its bandwidth factor by r."""
+        return {
+            chan: float(np.exp(s / w))
+            for chan, (s, w) in self._chan.items()
+            if w > 0
+        }
 
     def op_class_ratios(self, device: int) -> Dict[str, float]:
         """Per-op-class observed/predicted ratio for ``device`` (geometric

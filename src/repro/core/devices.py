@@ -128,32 +128,66 @@ class ClusterSpec:
         return bool(np.all(self._closure[0] > 0))
 
     # -------------------------------------------------------------- elastic
-    def with_derate(self, derate: Mapping[int, float]) -> "ClusterSpec":
-        """Clone of the cluster with per-device speed factors applied.
+    def with_derate(
+        self,
+        derate: Optional[Mapping[int, float]] = None,
+        *,
+        links: Optional[Mapping[Tuple[int, int], float]] = None,
+    ) -> "ClusterSpec":
+        """Clone of the cluster with per-device speed and/or per-link
+        bandwidth factors applied.
 
         ``derate`` maps device index → speed factor (1.0 = nominal, 0.5 =
         half speed); missing devices keep their nominal spec.  Factors scale
-        ``peak_flops`` and ``hbm_bw`` (see :meth:`DeviceSpec.derated`);
-        device indices, link bandwidths/latencies, and memory capacities are
-        preserved, so placements and cost models over the clone use the SAME
-        indices as the original — this is what lets the serving engine
-        re-plan on an observed-speed cluster and still address its original
-        device handles.  The original cluster is never mutated.
+        ``peak_flops`` and ``hbm_bw`` (see :meth:`DeviceSpec.derated`).
+
+        ``links`` maps a ``(src, dst)`` device pair → bandwidth factor
+        applied to that DIRECT link (1.0 = nominal, 0.125 = an 8×-degraded
+        NIC, 0.0 = partitioned — the link drops out of the graph entirely
+        and the widest-path closure routes around it if any alternative
+        path exists).  A channel is physically one cable, so the factor is
+        applied to BOTH directions unless the reverse pair carries its own
+        explicit entry.  Factors on pairs with no direct link are ignored —
+        a multi-hop channel has no bandwidth of its own to degrade.
+
+        Device indices, link topology, and memory capacities are preserved,
+        so placements and cost models over the clone use the SAME indices
+        as the original — this is what lets the serving engine re-plan on
+        an observed-speed cluster (slow devices AND slow interconnect) and
+        still address its original device handles.  The original cluster is
+        never mutated.
         """
-        if not derate:
+        derate = derate or {}
+        links = links or {}
+        if not derate and not links:
             return self
         for i in derate:
             if not 0 <= i < self.k:
                 raise ValueError(f"derate index {i} out of range for k={self.k}")
+        for (a, b), f in links.items():
+            if not (0 <= a < self.k and 0 <= b < self.k) or a == b:
+                raise ValueError(
+                    f"link derate ({a},{b}) invalid for k={self.k}"
+                )
+            if not (f >= 0.0 and math.isfinite(f)):
+                raise ValueError(
+                    f"link derate factor must be finite and >= 0, got {f}"
+                )
         devices = [
             d.derated(float(derate.get(i, 1.0))) for i, d in enumerate(self.devices)
         ]
-        tag = ",".join(f"{i}:{derate[i]:.3g}" for i in sorted(derate))
+        bw = self.link_bw.copy()
+        for (a, b), f in sorted(links.items()):
+            bw[a, b] = self.link_bw[a, b] * f
+            if (b, a) not in links:
+                bw[b, a] = self.link_bw[b, a] * f
+        tags = [f"{i}:{derate[i]:.3g}" for i in sorted(derate)]
+        tags += [f"{a}-{b}:{links[(a, b)]:.3g}" for a, b in sorted(links)]
         return ClusterSpec(
             devices=devices,
-            link_bw=self.link_bw.copy(),
+            link_bw=bw,
             link_latency=self.link_latency.copy(),
-            name=f"{self.name}@derate[{tag}]",
+            name=f"{self.name}@derate[{','.join(tags)}]",
         )
 
     def without_device(self, idx: int) -> "ClusterSpec":

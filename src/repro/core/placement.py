@@ -472,6 +472,7 @@ def replan(
     config: Optional[PlanConfig] = None,
     *,
     derate: Optional[Mapping[int, float]] = None,
+    link_derate: Optional[Mapping[tuple, float]] = None,
 ) -> PlacementResult:
     """Elastic re-placement: hard device failures, soft derates, or both.
 
@@ -490,12 +491,20 @@ def replan(
             is actually behaving — closing the serving engine's
             observe → derate → replan loop. Indices are ORIGINAL cluster
             indices; derates for failed devices are ignored.
+        link_derate: optional map of ``(src, dst)`` device pair → bandwidth
+            factor of that direct link (0.125 = an 8×-degraded NIC, 0.0 =
+            partitioned).  Threaded into ``cluster.with_derate(links=...)``
+            so the cost model — and through it the MILP's comm prices, every
+            heuristic, and candidate scoring — sees the degraded channel and
+            routes tensor flows AROUND it instead of derating both endpoint
+            devices.  Pairs touching failed devices are dropped.
 
     Returns:
         A :class:`PlacementResult` whose placement maps node ids to
         SURVIVING device indices of the *original* cluster (so the executor
         can keep its device handles). ``extra`` records
-        ``failed_devices`` and, when given, the applied ``derate`` map.
+        ``failed_devices`` and, when given, the applied ``derate`` /
+        ``link_derate`` maps.
     """
     failed = (
         [failed_device]
@@ -512,9 +521,19 @@ def replan(
         for i, f in (derate or {}).items()
         if i not in failed and float(f) != 1.0
     }
-    # plan on the cluster as observed: derated speeds, minus failed devices
-    # (remove in descending index order so earlier indices stay stable)
-    sub = cluster.with_derate(derate) if derate else cluster
+    link_derate = {
+        (int(a), int(b)): float(f)
+        for (a, b), f in (link_derate or {}).items()
+        if a not in failed and b not in failed and float(f) != 1.0
+    }
+    # plan on the cluster as observed: derated speeds and links, minus failed
+    # devices (remove in descending index order so earlier indices stay
+    # stable — with_derate runs first, while link pairs are still original)
+    sub = (
+        cluster.with_derate(derate, links=link_derate)
+        if derate or link_derate
+        else cluster
+    )
     for i in sorted(failed, reverse=True):
         sub = sub.without_device(i)
     res = plan(graph, sub, config)
@@ -522,6 +541,8 @@ def replan(
     res.extra["failed_devices"] = failed
     if derate:
         res.extra["derate"] = dict(derate)
+    if link_derate:
+        res.extra["link_derate"] = {f"{a}-{b}": f for (a, b), f in link_derate.items()}
     if len(failed) == 1:
         res.extra["failed_device"] = failed[0]
     return res

@@ -17,6 +17,13 @@ per-replica engines.  ``--replicas 1`` (the default) is the single-engine
 path above, verbatim.  With replicas the CLI additionally prints the
 service plan, the router's event log (submits, dispatches, drains, replica
 spawns) and the per-tier latency report.
+
+``--fault-schedule PATH`` replays a chaos scenario
+(:class:`repro.serving.faults.FaultSchedule` JSON — write one with
+``FaultSchedule([...]).save(path)`` or ``FaultSchedule.random(...)``)
+into the run: scheduled device crashes, stalls, and link degradations
+land at their scripted steps, against the single engine or routed across
+replicas, and the fault log is printed after the run.
 """
 
 from __future__ import annotations
@@ -73,6 +80,17 @@ def _serve_replicas(args, cfg, params, cluster, plan_cfg):
         admission=args.admission, batching=args.batching,
         oversize=args.oversize,
     )
+    injector = None
+    if args.fault_schedule:
+        from repro.serving.faults import FaultInjector, FaultSchedule
+
+        schedule = FaultSchedule.load(args.fault_schedule)
+        injector = FaultInjector(schedule)
+        router.attach_fault_injector(injector)
+        print(
+            f"[serve] chaos: replaying '{schedule.name}' "
+            f"({len(schedule)} events, horizon {schedule.horizon} steps)"
+        )
     t0 = time.perf_counter()
     reqs = [
         Request(rid=i, prompt=[1 + i % 7, 2, 3, 4],
@@ -94,6 +112,9 @@ def _serve_replicas(args, cfg, params, cluster, plan_cfg):
             f"mean {row['mean_steps']:.1f} / max {int(row['max_steps'])} "
             "router steps"
         )
+    stats = router.stats()
+    print(f"[router] counters: {stats['counters']} slo_ok={stats['slo_ok']}")
+    print(f"[router] terminal states: {stats['finished_by_state']}")
     print(f"[router] {len(router.events)} events")
     for ev in router.events:
         detail = " ".join(
@@ -101,6 +122,15 @@ def _serve_replicas(args, cfg, params, cluster, plan_cfg):
             if k_ not in ("step", "kind")
         )
         print(f"[router]   s{ev['step']:<4d} {ev['kind']:<14s} {detail}")
+    if injector is not None:
+        print(f"[chaos] {len(injector.log)} injections")
+        for entry in injector.log:
+            e = entry["event"]
+            tgt = e["device"] if e["device"] is not None else tuple(e["link"])
+            print(
+                f"[chaos]   s{entry['clock']:<4d} {e['kind']:<14s} "
+                f"target={tgt} -> {entry['status']}"
+            )
 
 
 def main(argv=None):
@@ -177,6 +207,12 @@ def main(argv=None):
         "engine resumes its learned derates instead of re-observing",
     )
     ap.add_argument(
+        "--fault-schedule", default=None, metavar="PATH",
+        help="replay this chaos scenario (FaultSchedule JSON) into the run: "
+        "scheduled device crashes/stalls and link degradations fire at their "
+        "scripted engine/router steps (see repro.serving.faults)",
+    )
+    ap.add_argument(
         "--replicas", default="1", metavar="auto|N",
         help="serve N model replicas behind the SLO-aware router, or 'auto' "
         "to let the replica planner pick the count that maximizes total "
@@ -243,6 +279,17 @@ def main(argv=None):
         batching=args.batching,
         oversize=args.oversize,
     )
+    injector = None
+    if args.fault_schedule:
+        from repro.serving.faults import FaultInjector, FaultSchedule
+
+        schedule = FaultSchedule.load(args.fault_schedule)
+        injector = FaultInjector(schedule)
+        engine.attach_fault_injector(injector)
+        print(
+            f"[serve] chaos: replaying '{schedule.name}' "
+            f"({len(schedule)} events, horizon {schedule.horizon} steps)"
+        )
     print(
         f"[serve] {args.arch}: placement={engine.placement_result.method} "
         f"stages={len(engine.executor.stages)} devices={len(engine.devices)} "
@@ -280,7 +327,14 @@ def main(argv=None):
         f"events={len(engine.adaptation_events)}"
     )
     for ev in engine.adaptation_events:
-        dev = "cluster" if ev.device < 0 else f"dev{ev.device}"
+        # ev.device is an int (device), an (src, dst) tuple (channel), or
+        # -1 (a cluster-wide replan decision)
+        if isinstance(ev.device, tuple):
+            dev = f"ch{ev.device[0]}-{ev.device[1]}"
+        elif ev.device < 0:
+            dev = "cluster"
+        else:
+            dev = f"dev{ev.device}"
         print(
             f"[adapt]   w{ev.window:<3d} {ev.action:<8s} {dev:<8s}"
             f" ratio={ev.ratio:6.2f} factor {ev.old_factor:.3f}→{ev.new_factor:.3f}"
@@ -290,7 +344,20 @@ def main(argv=None):
         print(
             f"[adapt] replan (w{h['window']}): {h['reason']} — "
             f"method={h['method']} stages={h['stages']} derate={h['derate']}"
+            + (
+                f" link_derate={h['link_derate']}"
+                if h.get("link_derate") else ""
+            )
         )
+    if injector is not None:
+        print(f"[chaos] {len(injector.log)} injections")
+        for entry in injector.log:
+            e = entry["event"]
+            tgt = e["device"] if e["device"] is not None else tuple(e["link"])
+            print(
+                f"[chaos]   s{entry['clock']:<4d} {e['kind']:<14s} "
+                f"target={tgt} -> {entry['status']}"
+            )
 
 
 if __name__ == "__main__":

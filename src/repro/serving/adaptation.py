@@ -149,18 +149,37 @@ class AdaptationEvent:
     (factor raised toward 1.0 on recovery), ``"hold"`` (streak confirmed
     but the proposed factor fell inside the hysteresis deadband), or
     ``"replan"`` (a window's accepted factor changes were committed and a
-    re-placement was requested).  ``device`` is -1 for cluster-wide events
-    (replan).  ``ratio`` is the fleet-normalized observed/predicted ratio
-    that drove the decision.
+    re-placement was requested).  ``device`` is a device index, a
+    ``(src, dst)`` tuple for CHANNEL decisions (a degraded link's bandwidth
+    factor moving), or -1 for cluster-wide events (replan).  ``ratio`` is
+    the fleet-normalized observed/predicted ratio that drove the decision.
     """
 
     window: int
-    device: int
+    device: object
     action: str
     ratio: float = float("nan")
     old_factor: float = 1.0
     new_factor: float = 1.0
     reason: str = ""
+
+
+def _key_sort(k: object):
+    """Deterministic ordering over mixed device (int) / channel (tuple)
+    keys: devices first, then channels, each ascending."""
+    return (1, tuple(k)) if isinstance(k, tuple) else (0, (k,))
+
+
+def _key_to_str(k: object) -> str:
+    """JSON-safe key: ``"3"`` for device 3, ``"1-4"`` for channel (1, 4)."""
+    return f"{k[0]}-{k[1]}" if isinstance(k, tuple) else str(k)
+
+
+def _key_from_str(s: str) -> object:
+    if "-" in s:
+        a, b = s.split("-", 1)
+        return (int(a), int(b))
+    return int(s)
 
 
 class DeratePolicy:
@@ -173,16 +192,29 @@ class DeratePolicy:
     including holds — is appended to :attr:`events` (bounded to the most
     recent :data:`EVENT_LOG_KEEP` entries so a long-lived engine cannot
     accumulate an unbounded log).
+
+    Keys are device indices (ints) OR ``(src, dst)`` channel tuples: the
+    same streak/EMA/hysteresis machinery governs per-device speed factors
+    and per-link bandwidth factors — a comm-heavy stage boundary running
+    consistently slow derates the connecting CHANNEL, and the replan routes
+    tensor flows around the degraded interconnect
+    (``ClusterSpec.with_derate(links=...)``) instead of slowing both
+    endpoint devices in the model.
     """
 
     def __init__(self, config: Optional[AdaptationConfig] = None):
         self.config = config or AdaptationConfig()
-        self.factors: Dict[int, float] = {}   # device -> current speed factor
+        # device (int) or channel (tuple) -> current speed/bandwidth factor
+        self.factors: Dict[object, float] = {}
         self.events: List[AdaptationEvent] = []
         self.windows = 0
-        self._ema: Dict[int, float] = {}      # device -> log-space EMA of ratio
-        self._hi: Dict[int, int] = {}         # consecutive slow windows
-        self._lo: Dict[int, int] = {}         # consecutive recovered windows
+        # devices confirmed DEAD (hard failures) — persisted alongside the
+        # derate state so a restarted engine plans without them instead of
+        # replanning on the full cluster (the caller syncs this list)
+        self.failed_devices: List[int] = []
+        self._ema: Dict[object, float] = {}   # key -> log-space EMA of ratio
+        self._hi: Dict[object, int] = {}      # consecutive slow windows
+        self._lo: Dict[object, int] = {}      # consecutive recovered windows
 
     # ------------------------------------------------------------------
     def _log(self, event: AdaptationEvent) -> None:
@@ -196,17 +228,37 @@ class DeratePolicy:
         return self.factors.get(device, 1.0)
 
     def derate_map(self) -> Dict[int, float]:
-        """Devices currently modeled below nominal speed ({} when none)."""
-        return {d: f for d, f in self.factors.items() if f < 1.0}
+        """DEVICES currently modeled below nominal speed ({} when none)."""
+        return {
+            d: f
+            for d, f in self.factors.items()
+            if f < 1.0 and not isinstance(d, tuple)
+        }
+
+    def link_derate_map(self) -> Dict[tuple, float]:
+        """CHANNELS currently modeled below nominal bandwidth: ``(src,
+        dst)`` → factor, for ``ClusterSpec.with_derate(links=...)``."""
+        return {
+            c: f
+            for c, f in self.factors.items()
+            if f < 1.0 and isinstance(c, tuple)
+        }
 
     def forget(self, device: int) -> None:
         """Drop all state for ``device`` (factor, EMA, streaks) — called
         when the device leaves the cluster (hard failure), so later commits
-        cannot resurrect its derate."""
-        self.factors.pop(device, None)
-        self._ema.pop(device, None)
-        self._hi.pop(device, None)
-        self._lo.pop(device, None)
+        cannot resurrect its derate.  Channels touching the device go with
+        it: a link to a dead endpoint no longer exists to derate."""
+        keys = [device] + [
+            c
+            for c in set(self.factors) | set(self._ema) | set(self._hi) | set(self._lo)
+            if isinstance(c, tuple) and device in c
+        ]
+        for k in keys:
+            self.factors.pop(k, None)
+            self._ema.pop(k, None)
+            self._hi.pop(k, None)
+            self._lo.pop(k, None)
 
     # ------------------------------------------------- persistence
     def to_json(self) -> str:
@@ -215,14 +267,20 @@ class DeratePolicy:
 
         The decision log (:attr:`events`) is deliberately excluded: it is
         observability, not control state, and can grow to thousands of
-        entries.  Round trip with :meth:`from_json`."""
+        entries.  Round trip with :meth:`from_json`.
+
+        Version 2 adds channel keys (``"src-dst"``) and the
+        ``failed_devices`` list — hard failures persist WITH the derates,
+        so an engine restarted from this state excludes dead devices from
+        its first plan instead of replanning on the full cluster."""
         return json.dumps({
-            "version": 1,
+            "version": 2,
             "windows": self.windows,
-            "factors": {str(d): f for d, f in self.factors.items()},
-            "ema": {str(d): e for d, e in self._ema.items()},
-            "hi": {str(d): n for d, n in self._hi.items()},
-            "lo": {str(d): n for d, n in self._lo.items()},
+            "failed_devices": sorted(int(d) for d in self.failed_devices),
+            "factors": {_key_to_str(d): f for d, f in self.factors.items()},
+            "ema": {_key_to_str(d): e for d, e in self._ema.items()},
+            "hi": {_key_to_str(d): n for d, n in self._hi.items()},
+            "lo": {_key_to_str(d): n for d, n in self._lo.items()},
         })
 
     @classmethod
@@ -233,19 +291,29 @@ class DeratePolicy:
 
         ``config`` supplies the (non-serialized) knobs — the persisted state
         is control state only, so a restarted engine may resume the learned
-        derates under different thresholds.  Raises ``ValueError`` on a
-        payload this version cannot read."""
+        derates under different thresholds.  Reads version 1 (device-only)
+        and version 2 (channel keys + failed devices) payloads; raises
+        ``ValueError`` on anything else."""
         data = json.loads(payload)
-        if not isinstance(data, dict) or data.get("version") != 1:
+        if not isinstance(data, dict) or data.get("version") not in (1, 2):
             raise ValueError(
                 f"unsupported DeratePolicy state payload: {payload[:80]!r}"
             )
         pol = cls(config)
         pol.windows = int(data.get("windows", 0))
-        pol.factors = {int(d): float(f) for d, f in data.get("factors", {}).items()}
-        pol._ema = {int(d): float(e) for d, e in data.get("ema", {}).items()}
-        pol._hi = {int(d): int(n) for d, n in data.get("hi", {}).items()}
-        pol._lo = {int(d): int(n) for d, n in data.get("lo", {}).items()}
+        pol.failed_devices = [int(d) for d in data.get("failed_devices", [])]
+        pol.factors = {
+            _key_from_str(d): float(f) for d, f in data.get("factors", {}).items()
+        }
+        pol._ema = {
+            _key_from_str(d): float(e) for d, e in data.get("ema", {}).items()
+        }
+        pol._hi = {
+            _key_from_str(d): int(n) for d, n in data.get("hi", {}).items()
+        }
+        pol._lo = {
+            _key_from_str(d): int(n) for d, n in data.get("lo", {}).items()
+        }
         return pol
 
     def save(self, path: str) -> None:
@@ -277,24 +345,26 @@ class DeratePolicy:
         """Close one observation window.
 
         Args:
-            ratios: device index → fleet-normalized observed/predicted time
-                ratio for this window (1.0 = device behaves exactly as the
-                *current* — possibly already derated — cost model predicts).
-                Non-finite / non-positive entries are ignored; devices
-                absent from the map keep their streaks (no evidence ≠
+            ratios: device index (int) or channel ``(src, dst)`` tuple →
+                fleet-normalized observed/predicted time ratio for this
+                window (1.0 = the resource behaves exactly as the *current*
+                — possibly already derated — cost model predicts).
+                Non-finite / non-positive entries are ignored; keys absent
+                from the map keep their streaks (no evidence ≠
                 counter-evidence).
 
         Returns:
             ``None`` when no model change is warranted, else the complete
-            derate map (device → factor, only devices below nominal) to
-            re-plan the cluster with.  Callers must treat a non-``None``
+            factor map (devices AND channels below nominal) to re-plan the
+            cluster with — split it with :meth:`derate_map` /
+            :meth:`link_derate_map`.  Callers must treat a non-``None``
             return as "the cost model changed": re-plan, rebuild
             predictions, and keep feeding windows.
         """
         cfg = self.config
         self.windows += 1
-        changed: Dict[int, float] = {}
-        for dev, ratio in sorted(ratios.items()):
+        changed: Dict[object, float] = {}
+        for dev, ratio in sorted(ratios.items(), key=lambda kv: _key_sort(kv[0])):
             if not (ratio > 0.0 and math.isfinite(ratio)):
                 continue
             cur = self.factors.get(dev, 1.0)
@@ -359,14 +429,15 @@ class DeratePolicy:
             return None
         for dev, f in changed.items():
             self.factors[dev] = f
-            # the model just moved under this device: stale evidence is void
+            # the model just moved under this resource: stale evidence is void
             self._ema.pop(dev, None)
             self._hi[dev] = 0
             self._lo[dev] = 0
-        new_map = self.derate_map()
+        new_map = {**self.derate_map(), **self.link_derate_map()}
         self._log(AdaptationEvent(
             window=self.windows, device=-1, action="replan",
-            reason=f"committed factors for devices {sorted(changed)}; "
+            reason="committed factors for "
+                   f"{sorted(changed, key=_key_sort)}; "
                    f"derate map now {new_map}",
         ))
         return new_map

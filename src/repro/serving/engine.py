@@ -78,7 +78,7 @@ import dataclasses
 import os
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Deque, Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -108,6 +108,21 @@ class Request:
     before reading ``out_tokens``.  ``truncated`` flips when
     ``oversize="truncate"`` had to drop the prompt's oldest tokens to fit
     ``prompt + max_new_tokens`` inside the engine's cache capacity.
+
+    ``state`` is the TYPED terminal state every submission must reach —
+    no request is ever silently dropped:
+
+    * ``"pending"`` — not terminal yet (queued or in flight),
+    * ``"finished"`` — served to completion,
+    * ``"shed"`` — turned away by admission/oversize rejection or by the
+      router's rate limiting / SLO load shedding (``rejected`` also flips),
+    * ``"expired"`` — its ``deadline`` passed before it could be served,
+    * ``"failed"`` — lost to replica crashes more times than
+      ``max_retries`` allowed.
+
+    ``deadline`` (router steps since submission, ``None`` = none) and the
+    ``max_retries`` budget are enforced by the router; the engine itself
+    only distinguishes finished vs shed.
     """
 
     rid: int
@@ -121,6 +136,11 @@ class Request:
     # started requests (including hot-swap re-queues) but hands
     # never-started ones back to the caller (see ServingEngine.drain)
     started: bool = False
+    # robustness contract (enforced by the router; see class docstring)
+    deadline: Optional[int] = None
+    max_retries: int = 2
+    retries: int = 0
+    state: str = "pending"
 
 
 class ServingEngine:
@@ -283,20 +303,34 @@ class ServingEngine:
                 )
 
         # adaptation loop state: the policy owns streaks/hysteresis, the
-        # engine owns the applied derate map and the (derated) cost model.
+        # engine owns the applied derate maps and the (derated) cost model.
         # With AdaptationConfig.state_path set, a previously persisted
         # policy state is resumed: the engine plans on the derated cluster
-        # it had already learned instead of rediscovering the drift.
+        # it had already learned — MINUS the devices it had already seen
+        # die — instead of rediscovering drift and failures from scratch.
         self.policy = DeratePolicy(adapt)
         state_path = self.policy.config.state_path
         if state_path and os.path.exists(state_path):
             self.policy = DeratePolicy.load(state_path, self.policy.config)
         self.derate: Dict[int, float] = self.policy.derate_map()
-        self.cluster_effective: ClusterSpec = (
-            cluster.with_derate(self.derate) if self.derate else cluster
+        self.link_derate: Dict[Tuple[int, int], float] = (
+            self.policy.link_derate_map()
         )
+        self.failed_devices: List[int] = [
+            d for d in self.policy.failed_devices if 0 <= d < cluster.k
+        ]
+        self._devices_all: Optional[List[Any]] = None  # pre-failure jax devices
+        self.cluster_effective: ClusterSpec = self._effective_cluster()
         self.replan_history: List[Dict[str, Any]] = []
         self._steps_since_window = 0
+
+        # chaos-harness state: an optional FaultInjector polled at the top
+        # of every step(); injected transient faults stash the pre-fault
+        # factor so a recover event can restore it exactly
+        self._injector = None
+        self._stall_prev: Dict[int, Optional[float]] = {}
+        self._link_fault_prev: Dict[Tuple[int, int], Optional[float]] = {}
+        self.fault_log: Deque[Dict[str, Any]] = deque(maxlen=4096)
 
         self.graph = transformer_graph(cfg, seq_len=max_len, granularity="block")
         self._cost = self._make_cost()
@@ -311,13 +345,16 @@ class ServingEngine:
                     f"{len(self.graph.nodes)} nodes at max_len={max_len})"
                 )
             self.placement_result = placement_result
-        elif self.derate:
+        elif self.failed_devices or self.derate or self.link_derate:
             self.placement_result = replan(
-                self.graph, cluster, (), self.plan_cfg, derate=self.derate
+                self.graph, cluster, self.failed_devices, self.plan_cfg,
+                derate=self.derate, link_derate=self.link_derate,
             )
         else:
             self.placement_result = plan(self.graph, cluster, self.plan_cfg)
-        self._build_executor(self.placement_result.placement)
+        self._build_executor(
+            self._executor_placement(self.placement_result.placement)
+        )
 
         self.queue: List[Request] = []
         # drain mode: no NEW request may start — submit() refuses, _admit
@@ -337,8 +374,38 @@ class ServingEngine:
         self.active: List[Optional[Request]] = [None] * slots
         self.slot_pos = np.zeros(slots, dtype=np.int64)
         self.caches = None
-        self.failed_devices: List[int] = []
-        self._devices_all: Optional[List[Any]] = None  # pre-failure jax devices
+        # count of terminal requests pushed out of the bounded
+        # _unclaimed_finished ring before any drain call claimed them —
+        # surfaced in straggler_report() so the loss is visible, not silent
+        self._unclaimed_overflow = 0
+
+    # ------------------------------------------------------------------
+    def _effective_cluster(self) -> ClusterSpec:
+        """The nominal cluster with the applied device AND channel derates
+        folded in (original indices; failed devices are excluded at plan
+        time, not here — the cost model stays valid in original indices)."""
+        if self.derate or self.link_derate:
+            return self.cluster.with_derate(self.derate, links=self.link_derate)
+        return self.cluster
+
+    # ------------------------------------------------------------------
+    def _executor_placement(self, placement: Dict[int, int]) -> Dict[int, int]:
+        """Translate a plan in ORIGINAL cluster indices into the compacted
+        alive-device indices the executor runs on (and point
+        ``self.devices`` at the surviving jax devices).  Identity while no
+        device has failed; shared by startup (a restart that resumed
+        ``failed_devices`` from persisted policy state) and every
+        failure/derate rebuild."""
+        if not self.failed_devices:
+            return dict(placement)
+        alive = [i for i in range(self.cluster.k) if i not in self.failed_devices]
+        if self._devices_all is None:
+            self._devices_all = list(self.devices)
+        self.devices = [
+            self._devices_all[i % len(self._devices_all)] for i in alive
+        ]
+        remap = {orig: j for j, orig in enumerate(alive)}
+        return {n: remap[k] for n, k in placement.items()}
 
     # ------------------------------------------------------------------
     def _make_cost(self) -> CostModel:
@@ -359,9 +426,14 @@ class ServingEngine:
     # ------------------------------------------------------------------
     def _persist_policy(self):
         """Write the policy's control state to ``state_path`` (when set) so
-        an engine restart resumes the learned derates."""
+        an engine restart resumes the learned derates — and the known-dead
+        device list, so the restarted engine excludes them from its very
+        first plan instead of re-crashing into them."""
         path = self.policy.config.state_path
         if path:
+            self.policy.failed_devices = sorted(
+                int(d) for d in self.failed_devices
+            )
             self.policy.save(path)
 
     # ------------------------------------------------------------------
@@ -452,10 +524,16 @@ class ServingEngine:
                 # budget < 1: even an empty prompt cannot fit the requested
                 # generation — truncation cannot save it
                 req.rejected = True
+                req.state = "shed"
                 req.done = True
                 self._record_finished(req)
                 if self._finish_sink is None:
                     # no drain call active: hold the reject for the next one
+                    if (
+                        len(self._unclaimed_finished)
+                        == self._unclaimed_finished.maxlen
+                    ):
+                        self._unclaimed_overflow += 1
                     self._unclaimed_finished.append(req)
                 return
             req.prompt = list(req.prompt[-budget:])   # keep the newest context
@@ -538,6 +616,7 @@ class ServingEngine:
                     if self.admission == "reject" and not head.out_tokens:
                         req = self.queue.pop(qi)
                         req.rejected = True
+                        req.state = "shed"
                         req.done = True
                         self._record_finished(req)
                         continue
@@ -716,6 +795,7 @@ class ServingEngine:
             or self.slot_pos[slot] >= self.max_len - 1
         ):
             req.done = True
+            req.state = "finished"
             self.active[slot] = None
             # park the freed slot at depth 0: an inactive row's garbage
             # decode then writes (and attends) at its row's position 0,
@@ -751,7 +831,13 @@ class ServingEngine:
         ONE fused forward instead: pending prefill chunks pack into the
         decode batch as rows with their own ``(cache_pos, q_len)``, every
         mid-prefill slot advances a chunk every step, and the compiled
-        program count per step drops from two to one."""
+        program count per step drops from two to one.
+
+        An attached :class:`~repro.serving.faults.FaultInjector` is polled
+        FIRST — scheduled faults land before admission/decode, so a step-N
+        fault affects step N, exactly as the schedule says."""
+        if self._injector is not None:
+            self._injector.on_step(self)
         self._admit()
         if self._fused_on():
             return self._step_fused()
@@ -1005,28 +1091,18 @@ class ServingEngine:
         self.queue[:0] = pending
 
     def _replan_and_rebuild(self, reason: str):
-        """Re-plan on the observed cluster (minus failures, with derates)
-        and hot-swap the executor; one path shared by failure handling and
-        the adaptation loop."""
+        """Re-plan on the observed cluster (minus failures, with device AND
+        channel derates) and hot-swap the executor; one path shared by
+        failure handling, fault injection, and the adaptation loop."""
         res = replan(
             self.graph, self.cluster, self.failed_devices, self.plan_cfg,
-            derate=self.derate,
+            derate=self.derate, link_derate=self.link_derate,
         )
         self.placement_result = res
-        self.cluster_effective = (
-            self.cluster.with_derate(self.derate) if self.derate else self.cluster
-        )
+        self.cluster_effective = self._effective_cluster()
         self._cost = self._make_cost()
-        alive = [i for i in range(self.cluster.k) if i not in self.failed_devices]
-        # executor works over a compacted device list aligned with `alive`
-        if self._devices_all is None:
-            self._devices_all = list(self.devices)
-        self.devices = [
-            self._devices_all[i % len(self._devices_all)] for i in alive
-        ]
-        remap = {orig: j for j, orig in enumerate(alive)}
         self._requeue_active()
-        self._build_executor({n: remap[k] for n, k in res.placement.items()})
+        self._build_executor(self._executor_placement(res.placement))
         if len(self.replan_history) >= 4096:  # bounded, like every other log
             del self.replan_history[:-2048]
         self.replan_history.append({
@@ -1034,6 +1110,9 @@ class ServingEngine:
             "window": self.policy.windows,
             "failed_devices": list(self.failed_devices),
             "derate": dict(self.derate),
+            "link_derate": {
+                f"{a}-{b}": f for (a, b), f in sorted(self.link_derate.items())
+            },
             "method": res.method,
             "stages": len(self.executor.stages),
         })
@@ -1051,13 +1130,95 @@ class ServingEngine:
         if device_idx in self.failed_devices or not 0 <= device_idx < self.cluster.k:
             raise ValueError(f"bad or already-failed device {device_idx}")
         self.failed_devices.append(device_idx)
-        # a dead device needs no derate — drop it from the applied map AND
+        # a dead device needs no derate — drop it from the applied maps AND
         # from the policy, or the next committed factor change would
-        # resurrect the dead device's derate into engine state
+        # resurrect the dead device's derate into engine state.  Channels
+        # touching the dead device go with it (no endpoint, no channel).
         self.derate.pop(device_idx, None)
+        self._stall_prev.pop(device_idx, None)
+        for chan in [c for c in self.link_derate if device_idx in c]:
+            del self.link_derate[chan]
+        for chan in [c for c in self._link_fault_prev if device_idx in c]:
+            del self._link_fault_prev[chan]
         self.policy.forget(device_idx)
         self._persist_policy()
         self._replan_and_rebuild(reason=f"device {device_idx} failed")
+
+    # ------------------------------------------------------------------
+    # chaos harness: scheduled fault injection (see serving.faults)
+    # ------------------------------------------------------------------
+    def attach_fault_injector(self, injector) -> None:
+        """Attach a :class:`~repro.serving.faults.FaultInjector`; it is
+        polled at the top of every :meth:`step` (device/link indices in the
+        schedule are THIS engine's cluster indices)."""
+        self._injector = injector
+
+    def apply_fault(self, ev) -> str:
+        """Apply one :class:`~repro.serving.faults.FaultEvent` to this
+        engine.  Crashes route through :meth:`on_device_failure`; transient
+        faults (stall/degrade/partition) stash the pre-fault factor so the
+        matching ``recover`` restores it exactly, and each application
+        replans + hot-swaps so the placement reflects the faulted cluster.
+        Returns a status string (logged by the injector and in
+        :attr:`fault_log`); out-of-scope events are reported as ignored
+        rather than raising, so one schedule can drive many targets."""
+        status = self._apply_fault(ev)
+        self.fault_log.append({"kind": ev.kind, "status": status})
+        return status
+
+    def _apply_fault(self, ev) -> str:
+        if ev.kind == "device_crash":
+            dev = int(ev.device)
+            if dev in self.failed_devices or not 0 <= dev < self.cluster.k:
+                return f"ignored: device {dev} out of range or already failed"
+            self.on_device_failure(dev)
+            return f"crashed device {dev}"
+        if ev.kind == "device_stall":
+            dev = int(ev.device)
+            if dev in self.failed_devices or not 0 <= dev < self.cluster.k:
+                return f"ignored: device {dev} out of range or failed"
+            self._stall_prev.setdefault(dev, self.derate.get(dev))
+            self.derate[dev] = float(ev.factor)
+            self._replan_and_rebuild(
+                reason=f"injected stall on device {dev} (×{ev.factor:g})"
+            )
+            return f"stalled device {dev} at ×{ev.factor:g}"
+        if ev.kind in ("link_degrade", "link_partition"):
+            chan = (int(ev.link[0]), int(ev.link[1]))
+            if any(d in self.failed_devices for d in chan) or not all(
+                0 <= d < self.cluster.k for d in chan
+            ):
+                return f"ignored: link {chan} endpoint out of range or failed"
+            factor = 0.0 if ev.kind == "link_partition" else float(ev.factor)
+            self._link_fault_prev.setdefault(chan, self.link_derate.get(chan))
+            self.link_derate[chan] = factor
+            self._replan_and_rebuild(
+                reason=f"injected link fault {chan} (bw ×{factor:g})"
+            )
+            return f"degraded link {chan} to ×{factor:g}"
+        if ev.kind == "recover":
+            if ev.device is not None:
+                dev = int(ev.device)
+                if dev not in self._stall_prev:
+                    return f"ignored: device {dev} has no injected stall"
+                prev = self._stall_prev.pop(dev)
+                if prev is None:
+                    self.derate.pop(dev, None)
+                else:
+                    self.derate[dev] = prev
+                self._replan_and_rebuild(reason=f"device {dev} recovered")
+                return f"recovered device {dev}"
+            chan = (int(ev.link[0]), int(ev.link[1]))
+            if chan not in self._link_fault_prev:
+                return f"ignored: link {chan} has no injected fault"
+            prev = self._link_fault_prev.pop(chan)
+            if prev is None:
+                self.link_derate.pop(chan, None)
+            else:
+                self.link_derate[chan] = prev
+            self._replan_and_rebuild(reason=f"link {chan} recovered")
+            return f"recovered link {chan}"
+        return f"ignored: unknown fault kind {ev.kind!r}"
 
     # ------------------------------------------------------------------
     # adaptation loop: observe → derate → replan
@@ -1169,22 +1330,63 @@ class ServingEngine:
             baseline = float(np.median(others))
             if baseline <= 0:
                 continue
-            cal.add_stage_sample(devs[i], r / baseline, self._stage_classes[i])
-        ratios = cal.device_ratios()
+            rel = r / baseline
+            # channel attribution: the executor times the inter-stage
+            # device_put INSIDE the receiving stage's sample, so a degraded
+            # link reads as a slow downstream stage.  Split the evidence by
+            # the prediction's compute/comm shares — the compute share is
+            # device evidence, the comm share is evidence against the
+            # INCOMING channel — so correlated two-endpoint drift lands on
+            # the connecting channel instead of derating both devices.
+            total = self._pred_stage_s[i] if i < len(self._pred_stage_s) else 0.0
+            comm = (
+                self._pred_stage_comm_s[i]
+                if i < len(self._pred_stage_comm_s)
+                else 0.0
+            )
+            chan = (
+                self._stage_in_channel[i]
+                if i < len(self._stage_in_channel)
+                else None
+            )
+            comm_frac = comm / total if total > 0 else 0.0
+            if chan is None or comm_frac <= 0.0:
+                cal.add_stage_sample(devs[i], rel, self._stage_classes[i])
+            else:
+                cal.add_stage_sample(
+                    devs[i], rel, self._stage_classes[i], weight=1.0 - comm_frac
+                )
+                cal.add_channel_sample(chan[0], chan[1], rel, weight=comm_frac)
+        ratios = {**cal.device_ratios(), **cal.channel_ratios()}
         new_map = self.policy.observe(ratios)
         # every window mutates control state (streaks, EMAs, window count) —
         # persist now so a restart resumes mid-confirmation, not just after
         # a committed derate
         self._persist_policy()
         replanned = False
-        if new_map is not None and new_map != self.derate:
-            self.derate = new_map
-            self._replan_and_rebuild(reason="adaptive derate")
-            replanned = True
+        if new_map is not None:
+            dev_map = {
+                k: v for k, v in new_map.items() if not isinstance(k, tuple)
+            }
+            link_map = {k: v for k, v in new_map.items() if isinstance(k, tuple)}
+            # actively injected faults are ground truth, not inference — a
+            # policy commit must not wash them out before their recover event
+            for d in self._stall_prev:
+                if d in self.derate:
+                    dev_map[d] = self.derate[d]
+            for c in self._link_fault_prev:
+                if c in self.link_derate:
+                    link_map[c] = self.link_derate[c]
+            if dev_map != self.derate or link_map != self.link_derate:
+                self.derate = dev_map
+                self.link_derate = link_map
+                self._replan_and_rebuild(reason="adaptive derate")
+                replanned = True
         return {
             "window": self.policy.windows,
             "ratios": ratios,
             "derate": dict(self.derate),
+            "link_derate": dict(self.link_derate),
             "replanned": replanned,
             "stragglers": rep["stragglers"],
         }
@@ -1202,10 +1404,20 @@ class ServingEngine:
         from the derated cluster after every adaptation — stays valid after
         any number of failures, and predictions track the OBSERVED device
         speeds: after a correct derate, a slowed device's obs/pred ratio
-        returns to ~1."""
+        returns to ~1.
+
+        Side effects (consumed by ``observe_window``'s channel
+        attribution): ``self._pred_stage_comm_s`` — the comm seconds inside
+        each stage's prediction — and ``self._stage_in_channel`` — the
+        ``(src, dst)`` ORIGINAL-index endpoints of the inter-stage transfer
+        that lands in each stage's wall-clock sample (``StageExecutor``
+        times the incoming ``device_put`` inside the RECEIVING stage), or
+        ``None`` for the first stage / same-device boundaries."""
         pl = self.placement_result.placement
         batch = self._decode_batch()
         preds: List[float] = []
+        comm_preds: List[float] = []
+        channels: List[Optional[Tuple[int, int]]] = []
         prev_last: Optional[int] = None
         for st in self.executor.stages:
             t = sum(
@@ -1214,15 +1426,22 @@ class ServingEngine:
                 )
                 for n in st.node_ids
             )
+            c = 0.0
+            chan: Optional[Tuple[int, int]] = None
             if prev_last is not None and st.node_ids:
-                t += self._cost.comm_time(
-                    self.graph.nodes[prev_last].output_bytes * batch,
-                    pl[prev_last],
-                    pl[st.node_ids[0]],
+                src, dst = pl[prev_last], pl[st.node_ids[0]]
+                c = self._cost.comm_time(
+                    self.graph.nodes[prev_last].output_bytes * batch, src, dst
                 )
+                if src != dst:
+                    chan = (src, dst)
             if st.node_ids:
                 prev_last = st.node_ids[-1]
-            preds.append(t)
+            preds.append(t + c)
+            comm_preds.append(c)
+            channels.append(chan)
+        self._pred_stage_comm_s = comm_preds
+        self._stage_in_channel = channels
         return preds
 
     def _predict_prefill_stage_times(self, tokens: int) -> List[float]:
@@ -1364,4 +1583,8 @@ class ServingEngine:
                 "fused": self._fused_on(),
                 "stages": pre_stats,
             },
+            # terminal requests pushed out of the bounded unclaimed ring
+            # before any drain call collected them — nonzero means results
+            # were lost to the cap, not silently (satellite: visible loss)
+            "overflow": {"unclaimed_finished": self._unclaimed_overflow},
         }

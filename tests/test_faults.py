@@ -1,0 +1,601 @@
+"""Chaos harness (serving/faults.py) and graceful degradation: deterministic
+fault schedules, channel derates end to end (cluster → calibrator → policy →
+replan → engine), request deadlines/retries, SLO-aware shedding, and the
+zero-silent-loss typed-terminal-state contract (ISSUE 9)."""
+
+import json
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.costmodel import DerateCalibrator
+from repro.core.devices import ClusterSpec, DeviceSpec, tpu_slice_cluster
+from repro.core.modelgraph import transformer_graph
+from repro.core.placement import PlanConfig, replan
+from repro.serving.adaptation import AdaptationConfig, DeratePolicy
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.faults import (
+    FAULT_KINDS,
+    FaultEvent,
+    FaultInjector,
+    FaultSchedule,
+)
+from repro.serving.router import Replica, Router, RouterConfig
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    from repro.models.model import build_model
+
+    cfg = get_config("llama3.2-1b").smoke()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engine(cfg, params, cluster, **kw):
+    kw.setdefault("slots", 1)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("plan_cfg", PlanConfig(method="etf"))
+    kw.setdefault("eos_id", -1)
+    return ServingEngine(cfg, params, cluster, **kw)
+
+
+# ---------------------------------------------------------------------------
+# FaultEvent / FaultSchedule: validation, determinism, persistence
+# ---------------------------------------------------------------------------
+
+
+def test_fault_event_validation_and_roundtrip():
+    ev = FaultEvent(step=3, kind="link_degrade", link=[0, 1], factor=0.125,
+                    duration=4)
+    assert ev.link == (0, 1)           # coerced to an int tuple
+    assert FaultEvent.from_dict(ev.to_dict()) == ev
+    with pytest.raises(ValueError):
+        FaultEvent(step=0, kind="meteor_strike", device=0)
+    with pytest.raises(ValueError):
+        FaultEvent(step=-1, kind="device_crash", device=0)
+    with pytest.raises(ValueError):
+        FaultEvent(step=0, kind="device_crash")          # needs a device
+    with pytest.raises(ValueError):
+        FaultEvent(step=0, kind="link_degrade", device=0)  # needs a link
+    with pytest.raises(ValueError):
+        FaultEvent(step=0, kind="recover", device=0, link=(0, 1))
+    with pytest.raises(ValueError):
+        FaultEvent(step=0, kind="recover")
+    with pytest.raises(ValueError):
+        FaultEvent(step=0, kind="device_stall", device=0, factor=1.0)
+    with pytest.raises(ValueError):
+        FaultEvent(step=0, kind="link_degrade", link=(0, 1), factor=1.0)
+    with pytest.raises(ValueError):     # crashes are permanent
+        FaultEvent(step=0, kind="device_crash", device=0, duration=3)
+    with pytest.raises(ValueError):
+        FaultEvent(step=0, kind="device_stall", device=0, factor=0.5,
+                   duration=0)
+
+
+def test_schedule_sorts_and_json_roundtrips(tmp_path):
+    late = FaultEvent(step=9, kind="device_crash", device=1)
+    early = FaultEvent(step=2, kind="device_stall", device=0, factor=0.5,
+                       duration=4)
+    sched = FaultSchedule([late, early], name="scripted", seed=7)
+    assert [e.step for e in sched] == [2, 9]
+    assert sched.horizon == 9           # max over step + duration
+    assert len(sched) == 2
+    # JSON round-trip is exact (the artifact IS the scenario)
+    again = FaultSchedule.from_json(sched.to_json())
+    assert again == sched
+    path = tmp_path / "chaos.json"
+    sched.save(str(path))
+    assert FaultSchedule.load(str(path)) == sched
+    assert json.loads(path.read_text())["version"] == 1
+    with pytest.raises(ValueError):
+        FaultSchedule.from_json('{"version": 99}')
+
+
+def test_random_schedule_is_seed_deterministic():
+    kw = dict(horizon=50, n_devices=4, links=[(0, 1), (1, 2)], n_events=12)
+    a = FaultSchedule.random(11, **kw)
+    b = FaultSchedule.random(11, **kw)
+    c = FaultSchedule.random(12, **kw)
+    assert a == b                       # same seed → identical scenario
+    assert a.events != c.events         # different seed → different one
+    for s in (a, c):
+        assert all(e.kind in FAULT_KINDS for e in s)
+        crashes = [e.device for e in s if e.kind == "device_crash"]
+        assert len(crashes) == len(set(crashes))   # a dead device stays dead
+        assert len(crashes) < 4                    # never crashes the fleet
+
+
+def test_injector_fires_due_events_and_auto_recovers():
+    class Recorder:
+        def __init__(self):
+            self.seen = []
+
+        def apply_fault(self, ev):
+            self.seen.append((ev.kind, ev.device, ev.link))
+            return "ok"
+
+    sched = FaultSchedule([
+        FaultEvent(step=1, kind="device_stall", device=0, factor=0.5,
+                   duration=2),
+        FaultEvent(step=3, kind="link_degrade", link=(0, 1), factor=0.25,
+                   duration=1),
+    ])
+    target, inj = Recorder(), FaultInjector(sched)
+    fired = {}
+    for step in range(6):
+        for ev in inj.on_step(target):
+            fired.setdefault(step, []).append(ev.kind)
+    # stall at 1, its auto-recover at 1+2=3 alongside the degrade (scheduled
+    # events fire before pending recoveries); the degrade's own auto-recover
+    # lands at 4; nothing else fires
+    assert fired == {
+        1: ["device_stall"],
+        3: ["link_degrade", "recover"],
+        4: ["recover"],
+    }
+    assert target.seen[2] == ("recover", 0, None)
+    assert target.seen[3] == ("recover", None, (0, 1))
+    assert inj.exhausted
+    assert [e["clock"] for e in inj.log] == [1, 3, 3, 4]
+    assert all(e["status"] == "ok" for e in inj.log)
+
+
+# ---------------------------------------------------------------------------
+# per-link channel derates: ClusterSpec → closure → replan
+# ---------------------------------------------------------------------------
+
+
+def _tri_cluster(bw01=8e9, bw02=4e9, bw12=4e9):
+    devs = [DeviceSpec(f"d{i}", peak_flops=1e12, mem_bytes=16e9, hbm_bw=1e11)
+            for i in range(3)]
+    bw = np.zeros((3, 3))
+    bw[0, 1] = bw[1, 0] = bw01
+    bw[0, 2] = bw[2, 0] = bw02
+    bw[1, 2] = bw[2, 1] = bw12
+    return ClusterSpec(devs, bw, name="tri")
+
+
+def test_with_derate_links_scales_both_directions():
+    cluster = _tri_cluster()
+    der = cluster.with_derate(links={(0, 1): 0.5})
+    assert der.link_bw[0, 1] == pytest.approx(4e9)
+    assert der.link_bw[1, 0] == pytest.approx(4e9)   # one cable, both ways
+    assert der.link_bw[0, 2] == pytest.approx(4e9)   # others untouched
+    assert cluster.link_bw[0, 1] == pytest.approx(8e9)  # original unmutated
+    assert der.devices[0].peak_flops == cluster.devices[0].peak_flops
+    # an explicit reverse entry overrides the symmetric default
+    asym = cluster.with_derate(links={(0, 1): 0.5, (1, 0): 0.25})
+    assert asym.link_bw[0, 1] == pytest.approx(4e9)
+    assert asym.link_bw[1, 0] == pytest.approx(2e9)
+    # device and link derates compose in one call
+    both = cluster.with_derate({2: 0.5}, links={(0, 1): 0.5})
+    assert both.devices[2].peak_flops == pytest.approx(0.5e12)
+    assert both.link_bw[0, 1] == pytest.approx(4e9)
+    with pytest.raises(ValueError):
+        cluster.with_derate(links={(0, 7): 0.5})
+    with pytest.raises(ValueError):
+        cluster.with_derate(links={(1, 1): 0.5})
+    with pytest.raises(ValueError):
+        cluster.with_derate(links={(0, 1): -0.5})
+
+
+def test_link_partition_reroutes_via_widest_path():
+    cluster = _tri_cluster()
+    assert cluster.effective_bw(0, 1) == pytest.approx(8e9)
+    cut = cluster.with_derate(links={(0, 1): 0.0})
+    # direct link gone; the closure routes 0→2→1 at the 4 GB/s bottleneck
+    assert cut.link_bw[0, 1] == 0.0
+    assert cut.effective_bw(0, 1) == pytest.approx(4e9)
+    assert cut.is_connected()
+    # an 8x degrade that leaves the direct link BELOW the alternate path:
+    # the closure must prefer the 2-hop route
+    slow = cluster.with_derate(links={(0, 1): 0.125})
+    assert slow.effective_bw(0, 1) == pytest.approx(4e9)
+    # two-device cluster: a partition there is a real partition
+    two = ClusterSpec(
+        [DeviceSpec(f"d{i}", peak_flops=1e12, mem_bytes=16e9, hbm_bw=1e11)
+         for i in range(2)],
+        np.array([[0.0, 1e9], [1e9, 0.0]]),
+    ).with_derate(links={(0, 1): 0.0})
+    assert not two.is_connected()
+    assert math.isinf(two.comm_time(1e6, 0, 1))
+
+
+def test_replan_link_derate_routes_off_degraded_link():
+    cfg = get_config("llama3.2-1b")
+    graph = transformer_graph(cfg, seq_len=1024, granularity="block")
+    cluster = tpu_slice_cluster(n_slices=2)
+    pc = PlanConfig(method="moirai", objective="throughput",
+                    time_limit=5.0, mip_rel_gap=0.1)
+    nominal = replan(graph, cluster, (), pc)
+    assert set(nominal.placement.values()) == {0, 1}   # pipeline split pays
+    # the 0-1 interconnect collapses to ~nothing: a throughput plan that
+    # still crossed it would bottleneck on seconds-long transfers — the
+    # MILP's comm prices see the derated channel and fold onto one device
+    aware = replan(graph, cluster, (), pc, link_derate={(0, 1): 1e-9})
+    assert len(set(aware.placement.values())) == 1
+    assert aware.extra["link_derate"] == {"0-1": 1e-9}
+    assert aware.extra["failed_devices"] == []
+    # pairs touching failed devices (and no-op 1.0 factors) are dropped
+    tri = tpu_slice_cluster(n_slices=3)
+    res = replan(graph, tri, [1], PlanConfig(method="etf"),
+                 link_derate={(0, 1): 0.5, (0, 2): 1.0, (2, 0): 0.25})
+    assert res.extra["link_derate"] == {"2-0": 0.25}
+    assert 1 not in set(res.placement.values())
+
+
+# ---------------------------------------------------------------------------
+# channel attribution: calibrator samples → policy keys → persisted state
+# ---------------------------------------------------------------------------
+
+
+def test_calibrator_channel_samples_weighted_geomean():
+    cal = DerateCalibrator()
+    cal.add_channel_sample(0, 1, 4.0, weight=1.0)
+    cal.add_channel_sample(0, 1, 1.0, weight=1.0)
+    cal.add_channel_sample(1, 0, 9.0, weight=2.0)
+    ratios = cal.channel_ratios()
+    assert ratios[(0, 1)] == pytest.approx(2.0)     # sqrt(4*1)
+    assert ratios[(1, 0)] == pytest.approx(9.0)
+    # garbage and self-channels contribute nothing
+    cal.add_channel_sample(2, 3, float("nan"))
+    cal.add_channel_sample(2, 3, -2.0)
+    cal.add_channel_sample(2, 3, 5.0, weight=0.0)
+    cal.add_channel_sample(2, 2, 5.0)
+    assert (2, 3) not in cal.channel_ratios()
+    assert (2, 2) not in cal.channel_ratios()
+    # channel evidence is separate from device evidence
+    assert cal.device_ratios() == {}
+
+
+def test_policy_handles_mixed_device_and_channel_keys(tmp_path):
+    policy = DeratePolicy(AdaptationConfig(confirm_windows=2, smoothing=1.0))
+    for _ in range(2):
+        out = policy.observe({0: 4.0, (0, 1): 8.0})
+    assert out is not None                      # committed on confirmation
+    assert policy.derate_map() == {0: pytest.approx(0.25)}
+    assert policy.link_derate_map() == {(0, 1): pytest.approx(0.125)}
+    # forget(device) drops the device AND every channel touching it
+    policy.failed_devices = [1]
+    policy.forget(1)
+    assert policy.link_derate_map() == {}
+    assert policy.derate_map() == {0: pytest.approx(0.25)}
+    # JSON v2 round-trips mixed keys and the failed-device list
+    path = tmp_path / "derate.json"
+    policy.save(str(path))
+    loaded = DeratePolicy.load(str(path), policy.config)
+    assert loaded.derate_map() == {0: pytest.approx(0.25)}
+    assert loaded.failed_devices == [1]
+
+
+# ---------------------------------------------------------------------------
+# engine: fault application, stash/restore, persistence, cascades
+# ---------------------------------------------------------------------------
+
+
+def test_engine_applies_and_recovers_stall_and_link_faults(small_model):
+    cfg, params = small_model
+    eng = _engine(cfg, params, tpu_slice_cluster(n_slices=2))
+    # transient stall: derate lands, replan records it, recover restores
+    assert "stalled" in eng.apply_fault(
+        FaultEvent(step=0, kind="device_stall", device=1, factor=0.25))
+    assert eng.derate == {1: 0.25}
+    assert eng.replan_history[-1]["reason"].startswith("injected stall")
+    assert "recovered" in eng.apply_fault(
+        FaultEvent(step=0, kind="recover", device=1))
+    assert eng.derate == {}
+    # link fault: link_derate lands and is recorded in the replan extras
+    assert "degraded" in eng.apply_fault(
+        FaultEvent(step=0, kind="link_degrade", link=(0, 1), factor=0.125))
+    assert eng.link_derate == {(0, 1): 0.125}
+    assert eng.placement_result.extra["link_derate"] == {"0-1": 0.125}
+    assert "recovered" in eng.apply_fault(
+        FaultEvent(step=0, kind="recover", link=(0, 1)))
+    assert eng.link_derate == {}
+    # out-of-scope events are reported, never raised
+    assert "ignored" in eng.apply_fault(
+        FaultEvent(step=0, kind="recover", device=0))
+    assert "ignored" in eng.apply_fault(
+        FaultEvent(step=0, kind="device_stall", device=9, factor=0.5))
+    # crash: permanent, survivors own the placement, repeat is ignored
+    assert "crashed" in eng.apply_fault(
+        FaultEvent(step=0, kind="device_crash", device=1))
+    assert eng.failed_devices == [1]
+    assert set(eng.placement_result.placement.values()) == {0}
+    assert "ignored" in eng.apply_fault(
+        FaultEvent(step=0, kind="device_crash", device=1))
+    # the audit trail saw every application
+    assert [e["kind"] for e in eng.fault_log].count("device_crash") == 2
+    req = Request(rid=0, prompt=[1, 2], max_new_tokens=2)
+    eng.submit(req)
+    eng.run_until_drained()
+    assert req.done and req.state == "finished"
+
+
+def test_engine_crash_drops_link_faults_touching_dead_device(small_model):
+    cfg, params = small_model
+    eng = _engine(cfg, params, tpu_slice_cluster(n_slices=3))
+    eng.apply_fault(FaultEvent(step=0, kind="link_degrade", link=(1, 2),
+                               factor=0.25))
+    assert eng.link_derate == {(1, 2): 0.25}
+    eng.apply_fault(FaultEvent(step=0, kind="device_crash", device=2))
+    # no endpoint, no channel: the dead device's links leave with it, and a
+    # late recover for them is a no-op, not a KeyError
+    assert eng.link_derate == {}
+    assert "ignored" in eng.apply_fault(
+        FaultEvent(step=0, kind="recover", link=(1, 2)))
+
+
+def test_engine_injector_schedule_is_token_identical(small_model):
+    """A scripted stall + recovery mid-serve (two hot-swaps) must not change
+    a single greedy token — the chaos harness composes with the re-prefill
+    resume path."""
+    cfg, params = small_model
+    cluster = tpu_slice_cluster(n_slices=2)
+    ref_eng = _engine(cfg, params, cluster)
+    ref = Request(rid=0, prompt=[1, 2, 3], max_new_tokens=6)
+    ref_eng.submit(ref)
+    ref_eng.run_until_drained()
+    assert len(ref.out_tokens) == 6
+
+    eng = _engine(cfg, params, cluster)
+    sched = FaultSchedule([
+        FaultEvent(step=2, kind="device_stall", device=1, factor=0.3,
+                   duration=2),
+    ])
+    eng.attach_fault_injector(FaultInjector(sched))
+    req = Request(rid=0, prompt=[1, 2, 3], max_new_tokens=6)
+    eng.submit(req)
+    eng.run_until_drained()
+    assert req.done and req.out_tokens == ref.out_tokens
+    assert [e["kind"] for e in eng.fault_log] == ["device_stall", "recover"]
+    assert eng.derate == {}                       # recovered to nominal
+
+
+def test_engine_restart_excludes_persisted_failed_devices(small_model, tmp_path):
+    """ISSUE-9 satellite: failed devices persist with the derate state, so a
+    restarted engine never places work on a device known to be dead."""
+    cfg, params = small_model
+    cluster = tpu_slice_cluster(n_slices=2)
+    state = tmp_path / "derate-state.json"
+    adapt = AdaptationConfig(state_path=str(state))
+    eng = _engine(cfg, params, cluster, adapt=adapt)
+    eng.apply_fault(FaultEvent(step=0, kind="device_crash", device=1))
+    assert json.loads(state.read_text())["failed_devices"] == [1]
+
+    fresh = _engine(cfg, params, cluster, adapt=adapt)   # restart
+    assert fresh.failed_devices == [1]
+    assert 1 not in set(fresh.placement_result.placement.values())
+    req = Request(rid=0, prompt=[1, 2], max_new_tokens=3)
+    fresh.submit(req)
+    fresh.run_until_drained()
+    assert req.done and req.state == "finished"
+
+
+def test_cascading_second_crash_during_recovery_token_identical(small_model):
+    """A second device dies while the engine is still absorbing the first
+    crash (re-queued work not yet resumed) — both hot-swaps compose and the
+    recovered decode is greedy-token-identical to the unfaulted run."""
+    cfg, params = small_model
+    cluster = tpu_slice_cluster(n_slices=3)
+    ref_eng = _engine(cfg, params, cluster)
+    ref = Request(rid=0, prompt=[1, 2, 3], max_new_tokens=6)
+    ref_eng.submit(ref)
+    ref_eng.run_until_drained()
+
+    eng = _engine(cfg, params, cluster)
+    req = Request(rid=0, prompt=[1, 2, 3], max_new_tokens=6)
+    eng.submit(req)
+    eng.step()
+    eng.step()
+    assert 0 < len(req.out_tokens) < 6
+    eng.on_device_failure(2)
+    assert eng.queue == [req]           # re-queued, not yet re-admitted…
+    eng.on_device_failure(1)            # …when the second device dies
+    assert eng.failed_devices == [2, 1]
+    assert set(eng.placement_result.placement.values()) == {0}
+    eng.run_until_drained()
+    assert req.done and req.out_tokens == ref.out_tokens
+
+
+def test_crash_mid_prefill_chunk_token_identical(small_model):
+    """A crash landing between prefill chunks re-prefills the WHOLE prompt
+    on the survivors; the chunked state that was lost must not leak into
+    the resumed decode."""
+    cfg, params = small_model
+    cluster = tpu_slice_cluster(n_slices=2)
+    prompt = list(range(1, 9))
+    ref_eng = _engine(cfg, params, cluster, prefill_chunk=2)
+    ref = Request(rid=0, prompt=list(prompt), max_new_tokens=4)
+    ref_eng.submit(ref)
+    ref_eng.run_until_drained()
+    assert len(ref.out_tokens) == 4
+
+    eng = _engine(cfg, params, cluster, prefill_chunk=2)
+    req = Request(rid=0, prompt=list(prompt), max_new_tokens=4)
+    eng.submit(req)
+    eng.step()                           # first chunk(s) consumed, no tokens
+    assert req.out_tokens == [] and req.started
+    eng.on_device_failure(0)
+    eng.run_until_drained()
+    assert req.done and req.out_tokens == ref.out_tokens
+
+
+def test_engine_overflow_counter_surfaces_dropped_finished(small_model):
+    from collections import deque
+
+    cfg, params = small_model
+    eng = _engine(cfg, params, tpu_slice_cluster(n_slices=1),
+                  oversize="reject")
+    eng._unclaimed_finished = deque(maxlen=1)
+    for rid in range(3):                 # oversize: prompt can never fit
+        eng.submit(Request(rid=rid, prompt=list(range(100)),
+                           max_new_tokens=60))
+    # ring kept 1, evicted 2 — the report says so instead of lying silently
+    assert eng._unclaimed_overflow == 2
+    assert eng.straggler_report()["overflow"]["unclaimed_finished"] == 2
+
+
+# ---------------------------------------------------------------------------
+# router: rate limits, deadlines, SLO shedding, crash retries
+# ---------------------------------------------------------------------------
+
+
+def _one_replica_router(cfg, params, *, slots=1, **router_kw):
+    cluster = tpu_slice_cluster(n_slices=1)
+
+    def factory(devs):
+        return _engine(cfg, params, cluster.subcluster(devs), slots=slots)
+
+    rep = Replica(name="replica0", devices=[0], engine=factory([0]))
+    return Router([rep], engine_factory=factory, **router_kw)
+
+
+def test_router_rate_limit_sheds_with_typed_state(small_model):
+    cfg, params = small_model
+    router = _one_replica_router(
+        cfg, params,
+        config=RouterConfig(tiers=1, tier_rates=[0.0]),   # bucket of exactly 1
+    )
+    reqs = [Request(rid=i, prompt=[1 + i], max_new_tokens=2) for i in range(3)]
+    for r in reqs:
+        router.submit(r)
+    assert [r.state for r in reqs] == ["pending", "shed", "shed"]
+    assert all(r.done for r in reqs[1:])          # typed terminal, immediately
+    assert all(r.rejected for r in reqs[1:])
+    router.run_until_drained()
+    assert reqs[0].state == "finished"
+    st = router.stats()
+    assert st["counters"]["shed"] == 2
+    assert st["finished_by_state"] == {"finished": 1, "shed": 2}
+
+
+def test_router_expires_queued_requests_past_deadline(small_model):
+    cfg, params = small_model
+    router = _one_replica_router(cfg, params, config=RouterConfig(tiers=1))
+    slow = Request(rid=0, prompt=[1], max_new_tokens=8)
+    hasty = Request(rid=1, prompt=[2], max_new_tokens=2, deadline=1)
+    router.submit(slow)
+    router.submit(hasty)
+    done = router.run_until_drained()
+    # hasty was stuck behind slow on the 1-slot replica past its deadline:
+    # expired while QUEUED, with no tokens wasted on a useless answer
+    assert hasty.state == "expired" and hasty.done
+    assert hasty.out_tokens == []
+    assert slow.state == "finished" and len(slow.out_tokens) == 8
+    assert {r.rid for r in done} == {0, 1}        # zero silent losses
+    assert router.counters["expired"] == 1
+    assert any(e["kind"] == "expired" for e in router.events)
+
+
+def test_router_slo_breach_sheds_batch_keeps_interactive(small_model):
+    cfg, params = small_model
+    router = _one_replica_router(
+        cfg, params,
+        config=RouterConfig(tiers=2, slo_p99_steps=1),
+    )
+    interactive = [Request(rid=i, prompt=[1 + i], max_new_tokens=3)
+                   for i in range(2)]
+    batch = [Request(rid=10 + i, prompt=[5 + i], max_new_tokens=3)
+             for i in range(3)]
+    for r in interactive:
+        router.submit(r, tier=0)
+    for r in batch:
+        router.submit(r, tier=1)
+    router.run_until_drained()
+    # the interactive tier always finishes; the batch tier absorbed the
+    # breach (shed from the back of the lowest tier first)
+    assert all(r.state == "finished" for r in interactive)
+    assert router.counters["shed"] >= 1
+    assert all(r.done for r in batch)             # shed OR finished, never lost
+    assert {r.state for r in batch} <= {"finished", "shed"}
+    shed_events = [e for e in router.events if e["kind"] == "shed"]
+    assert shed_events and all(e["tier"] == 1 for e in shed_events)
+
+
+def test_router_logs_noncrash_fault_with_status(small_model):
+    # the success path: a fault the engine absorbs (no replica crash) must
+    # come back with the engine's status string AND land in the event log
+    cfg, params = small_model
+    router = _one_replica_router(cfg, params, config=RouterConfig(tiers=1))
+    ev = FaultEvent(step=0, kind="device_stall", device=0, factor=0.5)
+    status = router.apply_fault(ev)
+    assert status == "replica0: stalled device 0 at ×0.5"
+    fault_events = [e for e in router.events if e["kind"] == "fault"]
+    assert len(fault_events) == 1
+    assert fault_events[0]["fault"] == "device_stall"
+    assert fault_events[0]["target"] == "device 0"
+    assert "stalled" in fault_events[0]["status"]
+
+
+def test_router_crash_retries_token_identical_on_survivor(small_model):
+    cfg, params = small_model
+    cluster = tpu_slice_cluster(n_slices=2)
+
+    def factory(devs):
+        return _engine(cfg, params, cluster.subcluster(devs), slots=1)
+
+    ref_eng = factory([1])
+    ref = Request(rid=0, prompt=[1, 2, 3], max_new_tokens=5)
+    ref_eng.submit(ref)
+    ref_eng.run_until_drained()
+
+    reps = [Replica(name=f"replica{i}", devices=[i], engine=factory([i]))
+            for i in range(2)]
+    router = Router(reps, engine_factory=factory,
+                    config=RouterConfig(tiers=1, retry_backoff=1))
+    req = Request(rid=0, prompt=[1, 2, 3], max_new_tokens=5)
+    router.submit(req)
+    router.step()
+    owner = next(e["replica"] for e in router.events
+                 if e["kind"] == "dispatch")
+    dev = next(r for r in router.replicas if r.name == owner).devices[0]
+    assert 0 < len(req.out_tokens) < 5
+    # its replica's only device dies: the engine cannot replan (no
+    # survivors), the router treats that as a replica crash and retries
+    status = router.apply_fault(
+        FaultEvent(step=0, kind="device_crash", device=dev))
+    assert "crashed" in status
+    assert req.retries == 1 and not req.done
+    router.run_until_drained()
+    assert req.state == "finished"
+    assert req.out_tokens == ref.out_tokens       # resumed greedy-identical
+    st = router.stats()
+    assert st["counters"]["crashed_replicas"] == 1
+    assert st["counters"]["retried"] == 1
+    assert [r["state"] for r in st["replicas"]].count("retired") == 1
+
+
+def test_router_exhausted_retry_budget_is_typed_failed(small_model):
+    cfg, params = small_model
+    router = _one_replica_router(cfg, params, config=RouterConfig(tiers=1))
+    req = Request(rid=0, prompt=[1, 2], max_new_tokens=4, max_retries=0)
+    router.submit(req)
+    router.step()
+    assert req.started
+    router.apply_fault(FaultEvent(step=0, kind="device_crash", device=0))
+    assert req.state == "failed" and req.done
+    assert router.counters["failed"] == 1
+    # the fleet is gone — but the submission still reached a terminal state
+    assert router.stats()["finished_by_state"] == {"failed": 1}
+    assert "ignored" in router.apply_fault(
+        FaultEvent(step=0, kind="device_crash", device=0))
+
+
+def test_router_event_log_overflow_is_counted(small_model):
+    cfg, params = small_model
+    router = _one_replica_router(
+        cfg, params, config=RouterConfig(tiers=1, event_log_keep=4))
+    for i in range(6):
+        req = Request(rid=i, prompt=[1 + i], max_new_tokens=1)
+        router.submit(req)
+    router.run_until_drained()
+    assert router.counters["events_dropped"] > 0
+    assert len(router.events) <= 4
+    assert router.stats()["counters"]["events_dropped"] == \
+        router.counters["events_dropped"]
