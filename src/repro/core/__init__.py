@@ -1,6 +1,6 @@
 # Moirai device placement: graph IR, GCOF fusion coarsening, heterogeneous
 # cluster model, MILP + heuristic + RL planners, event simulator.
-from .costmodel import CostModel
+from .costmodel import CostModel, expected_accepted_tokens
 from .devices import ClusterSpec, DeviceSpec, get_cluster
 from .fusion import DEFAULT_RULES, EIGEN_RULES, XLA_RULES, gcof, runtime_fuse
 from .graph import AugmentedDAG, OpGraph, OpNode, augment
@@ -16,6 +16,7 @@ from .simulate import (
     validate_pipeline_schedule,
     validate_schedule,
 )
+from .spec_plan import SpecPlan, merge_spec_graphs, plan_speculative
 
 __all__ = [
     "AugmentedDAG",
@@ -30,13 +31,17 @@ __all__ = [
     "PlacementResult",
     "PlanConfig",
     "SimResult",
+    "SpecPlan",
     "XLA_RULES",
     "augment",
     "bottleneck_time",
     "evaluate",
+    "expected_accepted_tokens",
     "gcof",
     "get_cluster",
+    "merge_spec_graphs",
     "plan",
+    "plan_speculative",
     "replan",
     "simulate",
     "simulate_pipeline",

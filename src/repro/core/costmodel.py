@@ -45,15 +45,67 @@ DEFAULT_DISPATCH_OVERHEAD_S = 3e-6  # per-kernel launch overhead
 # flops and activation bytes by the batch size but streams the invariant
 # bytes once, bending arithmetic intensity upward — the reason continuous
 # batching raises throughput on memory-bound decode in the first place.
+# Values calibrated from compiled cost_analysis() byte counts at batch
+# widths 1/2/4/8 (``python -m repro.launch.calibrate_invariant``): the
+# classes whose decode traffic is per-request KV/state (attention einsums,
+# SSD state updates, scans) fit to ~0 invariant share — only weight-
+# carrying classes amortize under batching.
 DEFAULT_BATCH_INVARIANT_FRAC: Dict[str, float] = {
-    "matmul": 0.95,     # decode GEMVs: weight-dominated traffic
-    "conv": 0.90,
-    "einsum": 0.60,     # attention einsums: KV streams per request
-    "ssd": 0.40,
-    "scan": 0.30,
+    "matmul": 0.99,     # decode GEMVs: weight-dominated traffic (fit 0.998)
+    "conv": 0.15,       # depthwise conv weight is tiny vs per-request state
+    "einsum": 0.0,      # attention einsums: KV streams per request
+    "ssd": 0.0,         # chunked state update: per-request state dominates
+    "scan": 0.0,        # associative state scans are pure per-request
     "softmax": 0.0,     # pure activation traffic
-    "default": 0.50,
+    "default": 0.50,    # unmeasured op classes keep the agnostic prior
 }
+
+
+def expected_accepted_tokens(acceptance_rate: float, spec_tokens: int) -> float:
+    """Expected tokens committed per speculative verify round.
+
+    With per-token acceptance probability ``a`` and ``k`` draft tokens, the
+    round commits the longest accepted prefix plus the target's bonus
+    token: ``E = sum_{i=0..k} a^i = (1 - a^{k+1}) / (1 - a)`` (``k+1``
+    exactly at ``a = 1``, ``1`` at ``a = 0`` — plain decode never commits
+    less).  This is the acceptance-rate parameterization the joint
+    draft+target planner scores with: the target graph runs ``1/E`` verify
+    forwards per committed token, the draft ``k/E`` proposal forwards."""
+    k = max(int(spec_tokens), 0)
+    a = min(max(float(acceptance_rate), 0.0), 1.0)
+    if k == 0:
+        return 1.0
+    if a >= 1.0:
+        return float(k + 1)
+    return float((1.0 - a ** (k + 1)) / (1.0 - a))
+
+
+def calibrate_invariant_frac(
+    bytes_by_batch: Mapping[str, Mapping[int, float]],
+    base: Optional[Mapping[str, float]] = None,
+) -> Dict[str, float]:
+    """Per-op-class batch-invariant traffic fractions from profiled bytes.
+
+    ``bytes_by_batch``: op class → {batch size → HBM bytes accessed by one
+    batched step at that width} (two or more widths), e.g. from compiled
+    ``cost_analysis`` dumps (``launch.calibrate_invariant`` collects them).
+    A linear traffic model ``bytes(B) = invariant + B · per_request`` is
+    least-squares fit per class; the returned fraction is
+    ``invariant / bytes(1)`` clipped to [0, 1] — exactly the
+    :data:`DEFAULT_BATCH_INVARIANT_FRAC` semantics.  Classes with fewer
+    than two widths (or a degenerate fit) keep their ``base`` value."""
+    out = dict(base or DEFAULT_BATCH_INVARIANT_FRAC)
+    for cls, pts in bytes_by_batch.items():
+        if len(pts) < 2:
+            continue
+        bs = np.asarray(sorted(pts), dtype=np.float64)
+        ys = np.asarray([pts[int(b)] for b in bs], dtype=np.float64)
+        slope, inv = np.polyfit(bs, ys, 1)
+        b1 = inv + slope  # fitted bytes at batch 1
+        if b1 <= 0:
+            continue
+        out[cls] = float(np.clip(inv / b1, 0.0, 1.0))
+    return out
 
 
 def paged_kv_factor(

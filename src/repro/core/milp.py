@@ -465,18 +465,29 @@ def solve_placement(
         # actual endpoint devices by the Eq. 7 lower bounds, so the busy sum
         # cannot be understated by relaxing u).
         # busy time includes the per-request prefill work (chunk passes run
-        # on the SAME device/channel the op's decode pass is placed on)
+        # on the SAME device/channel the op's decode pass is placed on).
+        # Speculative joint graphs scale each op's DECODE term by its
+        # meta["pass_rate"] (forwards per committed token: target 1/E,
+        # draft k/E) — prefill terms stay unscaled, both models prefill the
+        # prompt once per request.  Mirrors simulate.bottleneck_time exactly
+        # (the pinned two-graph busy-time parity).
+        rate = {
+            o: float(graph.nodes[o].meta.get("pass_rate", 1.0)) for o in ops
+        }
         for k in range(K):
             coeffs = {off_T: 1.0}
             for o in ops:
-                tk = float(p[o][k]) + float(p_pre[o][k])
+                tk = float(p[o][k]) * rate[o] + float(p_pre[o][k])
                 if tk:
                     coeffs[xv(o, k)] = -tk
             b.add(coeffs, 0.0, np.inf)
         for (a, bb) in chan_pairs:
             coeffs = {off_T: 1.0}
             for q in comms:
-                t = float(pcomm[q][a, bb]) if pcomm[q].size else 0.0
+                t = (
+                    float(pcomm[q][a, bb]) * rate[aug.comm[q].src]
+                    if pcomm[q].size else 0.0
+                )
                 t += float(pcomm_pre[q][a, bb]) if pcomm_pre[q].size else 0.0
                 if t:
                     coeffs[uv(q, a, bb)] = -t

@@ -148,6 +148,13 @@ class PlanConfig:
         Expected fraction of ``max_len`` a sequence actually occupies —
         scales the paged Eq. 5 term's page count (``1.0`` = worst case,
         every slot full).  Ignored without ``kv_page_tokens``.
+    draft_config / spec_tokens / acceptance_rate:
+        Speculative-decoding knobs (consumed by
+        :func:`repro.core.spec_plan.plan_speculative` and the serving
+        engine; :func:`plan` ignores them): the draft model's config name,
+        the draft tokens proposed per verify round, and the assumed
+        per-token acceptance probability that sets the merged graph's
+        pass rates (target ``1/E``, draft ``k/E``).
     """
 
     method: str = "moirai"           # moirai|etf|getf|msct|bottleneck_balance|placeto|round_robin|single
@@ -191,6 +198,22 @@ class PlanConfig:
     # length / max_len) — the configurable expected-residency estimate the
     # page term charges; 1.0 = worst case
     kv_residency: float = 1.0
+    # ---- speculative decoding (read by core.spec_plan.plan_speculative and
+    # the serving engine; plan() itself ignores them, so non-speculative
+    # planning is untouched) ---------------------------------------------
+    # config name of the draft model (e.g. "llama3.2-1b", "mamba2-130m");
+    # None disables speculation.  serve.py --draft sets it; the engine
+    # builds the draft graph from it and plans draft+target JOINTLY via
+    # plan_speculative (merged pass-rate graph, shared Eq. 5 memory)
+    draft_config: Optional[str] = None
+    # draft tokens proposed per verify round (k); each verify forward is a
+    # ragged q_len=k+1 row and a round commits expected_accepted_tokens(
+    # acceptance_rate, k) tokens.  0 disables speculation
+    spec_tokens: int = 0
+    # assumed per-token draft acceptance probability for SCORING (the
+    # engine measures the real rate per request class at serve time); sets
+    # the pass rates 1/E (target) and k/E (draft) on the merged graph
+    acceptance_rate: float = 0.75
     coarsen: bool = True             # GCOF (Fig. 10 c/d vs a/b)
     rules: Optional[Sequence[Sequence[str]]] = None
     time_limit: float = 120.0

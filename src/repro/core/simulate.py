@@ -89,7 +89,13 @@ def _task_table(
 
     for nid, node in graph.nodes.items():
         k = placement[nid]
-        dur[nid] = cost.compute_time(node, k, batch=decode_batch)
+        # speculative joint graphs: meta["pass_rate"] is the node's forwards
+        # per COMMITTED token (target 1/E, draft k/E) — decode-round work
+        # scales by it, so draft busy overlaps target verify at the right
+        # per-token rate in the event loop.  1.0 when absent (plain graphs).
+        dur[nid] = cost.compute_time(node, k, batch=decode_batch) * float(
+            node.meta.get("pass_rate", 1.0)
+        )
         resource[nid] = ("dev", k)
         deps[nid] = []
         fanout.setdefault(nid, [])
@@ -100,7 +106,10 @@ def _task_table(
             dur[q] = 0.0
             resource[q] = ("local",)  # zero-cost, no resource contention
         else:
-            dur[q] = cost.comm_time(c.bytes, ks, kd)
+            # a flow fires once per forward of its source node
+            dur[q] = cost.comm_time(c.bytes, ks, kd) * float(
+                graph.nodes[c.src].meta.get("pass_rate", 1.0)
+            )
             resource[q] = ("chan", ks, kd)
         deps[q] = [c.src]
         fanout.setdefault(q, []).append(c.dst)
@@ -1019,14 +1028,19 @@ def bottleneck_time(
     for nid, node in graph.nodes.items():
         k = placement[nid]
         key = ("dev", k)
+        # meta["pass_rate"] = forwards per committed token (speculative
+        # joint graphs: target 1/E, draft k/E); absent → 1.0.  Prefill work
+        # below is NOT scaled: both models prefill the prompt exactly once.
         busy[key] = busy.get(key, 0.0) + cost.compute_time(
             node, k, batch=decode_batch
-        )
+        ) * float(node.meta.get("pass_rate", 1.0))
     for q, c in aug.comm.items():
         ks, kd = placement[c.src], placement[c.dst]
         if ks != kd:
             key = ("chan", ks, kd)
-            busy[key] = busy.get(key, 0.0) + cost.comm_time(c.bytes, ks, kd)
+            busy[key] = busy.get(key, 0.0) + cost.comm_time(
+                c.bytes, ks, kd
+            ) * float(graph.nodes[c.src].meta.get("pass_rate", 1.0))
     if prompt_len and prompt_len > 0:
         for key, t in prefill_busy(
             graph, placement, cost,

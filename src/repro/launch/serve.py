@@ -191,6 +191,29 @@ def main(argv=None):
         "only meaningful with --kv-page-tokens)",
     )
     ap.add_argument(
+        "--draft", default=None, metavar="ARCH",
+        help="serve speculatively: this (smaller) arch drafts --spec-tokens "
+        "greedy tokens per ready slot between target steps and ONE fused "
+        "target forward verifies them (variable per-slot advance, token-"
+        "identical to plain greedy); draft + target are placed JOINTLY over "
+        "the merged pass-rate graph (shared Eq. 5 memory, per-device busy "
+        "summed across both models) — the draft lands on devices the target "
+        "leaves idle.  Single-engine path only (not with --replicas); "
+        "dense/moe draft archs only (the stage executor serves attention-"
+        "family blocks)",
+    )
+    ap.add_argument(
+        "--spec-tokens", type=int, default=4, metavar="K",
+        help="draft tokens proposed per speculative round (with --draft)",
+    )
+    ap.add_argument(
+        "--acceptance-rate", type=float, default=0.75, metavar="A",
+        help="the acceptance rate the joint planner assumes when scoring "
+        "draft/target placements (expected tokens per round "
+        "E = (1-a^(k+1))/(1-a)); compare against the observed per-class "
+        "rates in the post-run speculation report",
+    )
+    ap.add_argument(
         "--prompt-len", type=int, default=0, metavar="TOKENS",
         help="expected prompt tokens per request: lets the throughput "
         "planner charge each request's chunked-prefill work when scoring "
@@ -258,14 +281,29 @@ def main(argv=None):
         kv_page_tokens=args.kv_page_tokens or None,
         prefix_sharing=args.prefix_sharing,
         kv_residency=args.kv_residency,
+        spec_tokens=args.spec_tokens if args.draft else 0,
+        acceptance_rate=args.acceptance_rate,
     )
     if args.replicas != "1":
+        if args.draft:
+            ap.error("--draft is the single-engine path (not with --replicas)")
         return _serve_replicas(args, cfg, params, cluster, plan_cfg)
+    draft_kw = {}
+    if args.draft:
+        draft_cfg = get_config(args.draft)
+        if args.smoke:
+            draft_cfg = draft_cfg.smoke()
+        draft_model = build_model(draft_cfg)
+        draft_kw = dict(
+            draft_cfg=draft_cfg,
+            draft_params=draft_model.init(jax.random.PRNGKey(1)),
+        )
     engine = ServingEngine(
         cfg, params, cluster,
         slots=args.slots, max_len=args.max_len,
         plan_cfg=plan_cfg,
         eos_id=-1,
+        **draft_kw,
         # short windows can't carry the default 4-sample evidence minimum —
         # scale it down so --adapt-every 1..3 still observes (and acts)
         adapt=AdaptationConfig(
@@ -302,6 +340,10 @@ def main(argv=None):
             f"{',shared' if engine.prefix_sharing else ''})"
             if engine.kv_page_tokens else " kv=dense"
         )
+        + (
+            f" spec=draft:{args.draft},k={engine.spec_tokens}"
+            if args.draft else ""
+        )
     )
     t0 = time.perf_counter()
     reqs = [
@@ -319,6 +361,19 @@ def main(argv=None):
     if engine._kv_pool is not None:
         print(f"[serve] kv pool: {engine._kv_pool.stats()}")
     print(f"[serve] straggler report: {engine.straggler_report()['stragglers']}")
+    if args.draft:
+        spec = engine.speculation_report()
+        print(
+            f"[spec] k={spec['spec_tokens']} planned a="
+            f"{spec['planned_acceptance_rate']:.2f} "
+            f"(E={spec['planned_tokens_per_round']:.2f} tok/round)"
+        )
+        for cls, row in spec["classes"].items():
+            print(
+                f"[spec]   {cls}: {row['rounds']} rounds, observed a="
+                f"{row['acceptance_rate']:.2f}, "
+                f"{row['tokens_per_round']:.2f} tok/round"
+            )
 
     # ---- surface the adaptation loop's decisions -------------------------
     print(

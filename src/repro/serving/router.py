@@ -293,6 +293,9 @@ class Router:
         t = self.config.tiers - 1 if tier is None else int(tier)
         if not 0 <= t < self.config.tiers:
             raise ValueError(f"tier {t} outside 0..{self.config.tiers - 1}")
+        # stamp the class onto the request itself: engine-side per-class
+        # accounting (e.g. speculative acceptance rates) keys on it
+        req.tier = t
         rec = _Record(
             req=req, tier=t, on_token=on_token, submitted_step=self.step_count
         )
@@ -721,14 +724,25 @@ class Router:
         """Operator snapshot: the robustness counters (shed / expired /
         retried / failed / crashed_replicas / events_dropped — every
         non-served outcome is counted, never silent), per-tier queue
-        depths, per-replica state+health, SLO status, and the terminal
-        tally by :class:`Request.state`."""
+        depths, per-replica state+health, SLO status, the terminal
+        tally by :class:`Request.state`, and ``kv`` — the paged-KV pool
+        counters summed across replicas (``None`` when every replica
+        serves dense rows)."""
         by_state: Dict[str, int] = {}
         for req in self.finished:
             by_state[req.state] = by_state.get(req.state, 0) + 1
+        # service-wide paged-KV view: one counter sum over the replicas
+        # that run a pool (residency gauges and sharing counters alike)
+        kv: Dict[str, int] = {}
+        for r in self.replicas:
+            pool = getattr(r.engine, "_kv_pool", None)
+            if pool is not None:
+                for key, val in pool.stats().items():
+                    kv[key] = kv.get(key, 0) + int(val)
         return {
             "counters": dict(self.counters),
             "queued": [len(q) for q in self.tiers],
+            "kv": kv or None,
             "replicas": [
                 {
                     "name": r.name,

@@ -1,0 +1,63 @@
+"""Fast-tier config smoke: every registered architecture must build a
+planning graph and cost out on a heterogeneous cluster.
+
+``test_arch_smoke.py`` exercises real forward/train passes per arch, but it
+is slow-tier — a config edit that breaks graph construction or produces a
+degenerate cost model (zero/NaN op times, planner rejection) would only
+surface nightly.  This suite catches that in the fast tier: no model
+weights, no jit — just ``get_config(arch).smoke()`` → ``transformer_graph``
+→ ``CostModel`` → a cheap heuristic plan, asserting every derived quantity
+is finite and positive.
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.core import (
+    ClusterSpec,
+    CostModel,
+    DeviceSpec,
+    PlanConfig,
+    bottleneck_time,
+    plan,
+)
+from repro.core.devices import GB
+from repro.core.modelgraph import transformer_graph
+
+
+def _cluster():
+    return ClusterSpec(
+        devices=[
+            DeviceSpec("big", peak_flops=60e12, mem_bytes=32 * GB, hbm_bw=1200e9),
+            DeviceSpec("small", peak_flops=6e12, mem_bytes=12 * GB, hbm_bw=200e9),
+        ],
+        link_bw=np.full((2, 2), 25e9) * (1 - np.eye(2)),
+        name="config-smoke",
+    )
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_config_builds_graph_and_costs(arch):
+    cfg = get_config(arch).smoke()
+    g = transformer_graph(cfg, seq_len=32, granularity="block")
+    g.validate()
+    assert len(g.nodes) >= cfg.n_layers + 2  # embed + layers + head
+
+    cluster = _cluster()
+    cost = CostModel(cluster)
+    # every op must cost out finite and positive on every device
+    for nid, node in g.nodes.items():
+        for k in range(cluster.k):
+            t = cost.compute_time(node, k)
+            assert np.isfinite(t) and t > 0, (arch, nid, node.kind, k)
+        assert node.param_bytes >= 0 and node.flops >= 0, (arch, nid)
+    # total footprint and work must be positive and sane
+    assert 0 < g.total_param_bytes() < 64 * GB, arch
+    assert g.total_flops() > 0, arch
+
+    # a cheap heuristic plan must succeed and score finite
+    res = plan(g, cluster, PlanConfig(method="etf", objective="throughput"))
+    assert set(res.placement) == set(g.nodes)
+    b = bottleneck_time(g, res.placement, cost)
+    assert np.isfinite(b) and b > 0, (arch, b)
